@@ -1,0 +1,110 @@
+"""Kernel micro-benchmarks: wall time of the jnp oracle paths on CPU (the
+Pallas kernels themselves are TPU-target; interpret mode timing is not
+meaningful, so oracle timing + kernel-vs-oracle agreement is reported)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, *args, n=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def flash_attention_oracle() -> list[str]:
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for (b, s, h, kh, d) in [(1, 512, 8, 2, 64), (2, 1024, 8, 8, 64)]:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, s, h, d))
+        k = jax.random.normal(ks[1], (b, s, kh, d))
+        v = jax.random.normal(ks[2], (b, s, kh, d))
+        ref = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+        us = _timeit(ref, q, k, v)
+        out = flash_attention(q, k, v, causal=True, block_q=128,
+                              block_k=128, interpret=True)
+        err = float(jnp.abs(out - ref(q, k, v)).max())
+        rows.append(f"kernel/flash/b{b}s{s}h{h}kv{kh},{us:.0f},"
+                    f"kernel_err={err:.1e}")
+    return rows
+
+
+def wkv6_oracle() -> list[str]:
+    from repro.kernels.rwkv6.ops import wkv6
+    from repro.kernels.rwkv6.ref import wkv6_ref
+    key = jax.random.PRNGKey(1)
+    rows = []
+    for (b, h, s, d) in [(1, 4, 512, 64), (2, 8, 256, 64)]:
+        ks = jax.random.split(key, 5)
+        r = jax.random.normal(ks[0], (b, h, s, d))
+        k = jax.random.normal(ks[1], (b, h, s, d))
+        v = jax.random.normal(ks[2], (b, h, s, d))
+        w = jax.random.uniform(ks[3], (b, h, s, d), minval=0.6,
+                               maxval=0.999)
+        u = jax.random.normal(ks[4], (h, d)) * 0.5
+        ref = jax.jit(wkv6_ref)
+        us = _timeit(ref, r, k, v, w, u)
+        out, _ = wkv6(r, k, v, w, u, chunk=64, interpret=True)
+        err = float(jnp.abs(out - ref(r, k, v, w, u)[0]).max())
+        rows.append(f"kernel/wkv6/b{b}h{h}s{s},{us:.0f},kernel_err={err:.1e}")
+    return rows
+
+
+def rglru_oracle() -> list[str]:
+    from repro.kernels.rglru.ops import rglru
+    from repro.kernels.rglru.ref import rglru_ref
+    key = jax.random.PRNGKey(2)
+    rows = []
+    for (b, s, r_) in [(2, 1024, 256), (4, 512, 512)]:
+        ks = jax.random.split(key, 2)
+        a = jax.random.uniform(ks[0], (b, s, r_), minval=0.01, maxval=0.999)
+        x = jax.random.normal(ks[1], (b, s, r_))
+        ref = jax.jit(rglru_ref)
+        us = _timeit(ref, a, x)
+        h, _ = rglru(a, x, chunk=128, interpret=True)
+        err = float(jnp.abs(h - ref(a, x)[0]).max())
+        rows.append(f"kernel/rglru/b{b}s{s}r{r_},{us:.0f},"
+                    f"kernel_err={err:.1e}")
+    return rows
+
+
+def train_step_smoke() -> list[str]:
+    """Real wall time of a smoke-scale train step per arch family."""
+    from repro.configs import get_config
+    from repro.models import zoo
+    from repro.optim import AdamWConfig
+    from repro.train import TrainConfig, init_state, make_train_step
+    rows = []
+    for arch in ("olmo-1b", "mixtral-8x7b", "rwkv6-1.6b",
+                 "recurrentgemma-2b", "whisper-small"):
+        cfg = get_config(arch, smoke=True)
+        tcfg = TrainConfig(microbatches=1,
+                           optimizer=AdamWConfig(total_steps=10))
+        state = init_state(cfg, tcfg, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, tcfg))
+        key = jax.random.PRNGKey(1)
+        batch = {"tokens": jax.random.randint(key, (4, 32), 0, cfg.vocab)}
+        batch["targets"] = jnp.roll(batch["tokens"], -1, 1)
+        if zoo.needs_frontend(cfg):
+            batch["frontend"] = jnp.zeros(
+                (4, cfg.n_frontend_tokens, cfg.d_model))
+        state, m = step(state, batch)          # compile
+        us = _timeit(lambda s, b: step(s, b)[1]["loss"], state, batch, n=3)
+        rows.append(f"train_smoke/{arch},{us:.0f},"
+                    f"loss={float(m['loss']):.3f}")
+    return rows
+
+
+ALL = [flash_attention_oracle, wkv6_oracle, rglru_oracle, train_step_smoke]

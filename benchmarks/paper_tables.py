@@ -1,0 +1,233 @@
+"""Paper-table reproductions (one function per table/figure).
+
+Every function returns a list of CSV rows ``name,us_per_call,derived`` —
+``us_per_call`` is the simulated/measured op or step time in
+microseconds, ``derived`` is the paper's headline statistic for that
+table (speedup, accuracy, ...).  benchmarks/run.py prints them all.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (ConcurrencyRuntime, HillClimbProfiler, Op,
+                        Placement, RegressionSuite, RuntimeConfig,
+                        SimMachine, build_paper_graph,
+                        manual_best_schedule, paper_case_lists,
+                        uniform_schedule, PAPER_INPUT_SIZES)
+
+MACHINE = SimMachine()
+
+
+def _oracle(machine):
+    def fn(op, threads, variant):
+        return machine.op_time(op, Placement(threads, cache_sharing=variant))
+    return fn
+
+
+def fig1_scaling_curves() -> list[str]:
+    """Fig 1: execution time vs thread count for the three conv ops —
+    the concave curves with interior optima that motivate everything."""
+    rows = []
+    specs = [("Conv2DBackpropFilter", 740.0, 260.0, 0.95),
+             ("Conv2DBackpropInput", 700.0, 240.0, 0.95),
+             ("Conv2D", 660.0, 200.0, 0.96)]
+    shape = (32, 8, 8, 384)
+    elems = float(np.prod(shape))
+    for cls, fl, by, pf in specs:
+        op = Op(uid=0, name=cls, op_class=cls, input_shape=shape,
+                flops=elems * fl, bytes_moved=elems * by,
+                working_set=elems * by, parallel_fraction=pf)
+        t_best, pl = MACHINE.best_time_exhaustive(op)
+        for t in (1, 8, 16, 26, 34, 45, 56, 68):
+            dt = MACHINE.op_time(op, Placement(t, cache_sharing=(t % 2 == 0)))
+            rows.append(f"fig1/{cls}/t{t},{dt*1e6:.1f},"
+                        f"best_t={pl.threads}")
+    return rows
+
+
+def table1_concurrency_grid() -> list[str]:
+    """Table I: NN step time across (inter, intra) parallelism configs."""
+    rows = []
+    for model in ("resnet50", "dcgan"):
+        g = build_paper_graph(model)
+        base = uniform_schedule(g, MACHINE, intra=68, inter=1).makespan
+        for inter in (1, 2, 4):
+            for intra in (34, 68, 136):
+                res = uniform_schedule(g, MACHINE, intra=intra, inter=inter)
+                rows.append(
+                    f"table1/{model}/inter{inter}_intra{intra},"
+                    f"{res.makespan*1e6:.1f},"
+                    f"speedup={base/res.makespan:.2f}")
+    return rows
+
+
+def table2_input_size() -> list[str]:
+    """Table II: best thread count grows with input size."""
+    rows = []
+    for shape in PAPER_INPUT_SIZES:
+        elems = float(np.prod(shape))
+        op = Op(uid=0, name="bf", op_class="Conv2DBackpropFilter",
+                input_shape=shape, flops=elems * 740.0,
+                bytes_moved=elems * 260.0, working_set=elems * 260.0,
+                parallel_fraction=0.95)
+        t_best, pl = MACHINE.best_time_exhaustive(op)
+        t68 = MACHINE.op_time(op, Placement(68, cache_sharing=True))
+        rows.append(
+            f"table2/bwd_filter/{'x'.join(map(str, shape))},"
+            f"{t_best*1e6:.1f},"
+            f"best_threads={pl.threads};variance_vs68={100*(t68/t_best-1):.1f}%")
+    return rows
+
+
+def table3_corun() -> list[str]:
+    """Table III: sequential vs hyper-threaded vs split-core co-run of the
+    Conv2DBackpropFilter + Conv2DBackpropInput pair."""
+    shape = (32, 8, 8, 2048)
+    elems = float(np.prod(shape))
+    bf = Op(uid=0, name="bf", op_class="Conv2DBackpropFilter",
+            input_shape=shape, flops=elems * 740.0,
+            bytes_moved=elems * 260.0, working_set=elems * 260.0,
+            parallel_fraction=0.95)
+    bi = Op(uid=1, name="bi", op_class="Conv2DBackpropInput",
+            input_shape=shape, flops=elems * 700.0,
+            bytes_moved=elems * 240.0, working_set=elems * 240.0,
+            parallel_fraction=0.95)
+    seq = (MACHINE.op_time(bf, Placement(68, cache_sharing=True))
+           + MACHINE.op_time(bi, Placement(68, cache_sharing=True)))
+    ht = max(MACHINE.op_time(bf, Placement(68, cache_sharing=True),
+                             bw_share=0.5),
+             MACHINE.op_time(bi, Placement(68, cache_sharing=True,
+                                           hyper_thread=True),
+                             bw_share=0.5))
+    split = max(MACHINE.op_time(bf, Placement(34, cache_sharing=True),
+                                bw_share=0.5),
+                MACHINE.op_time(bi, Placement(34, cache_sharing=True),
+                                bw_share=0.5))
+    rows = [
+        f"table3/sequential_68,{seq*1e6:.1f},speedup=1.00",
+        f"table3/corun_hyperthread_68+68,{ht*1e6:.1f},"
+        f"speedup={seq/ht:.2f}",
+        f"table3/corun_split_34+34,{split*1e6:.1f},"
+        f"speedup={seq/split:.2f}",
+    ]
+    return rows
+
+
+def table4_regression_accuracy() -> list[str]:
+    """Table IV: regression-model accuracy (trained on resnet/dcgan/
+    inception ops, tested on alexnet) — low, as the paper found."""
+    oracle = _oracle(MACHINE)
+    train_ops = []
+    for m in ("resnet50", "dcgan", "inception_v3"):
+        g = build_paper_graph(m)
+        seen = set()
+        for op in g.ops.values():
+            if op.size_key not in seen:
+                seen.add(op.size_key)
+                train_ops.append(op)
+    test_g = build_paper_graph("alexnet")
+    seen = set()
+    test_ops = [op for op in test_g.ops.values()
+                if op.size_key not in seen and not seen.add(op.size_key)]
+    suite = RegressionSuite(feature_fn=MACHINE.counters, oracle=oracle,
+                            cases=[1, 9, 17, 25, 33])
+    rows = []
+    for name in ("GradientBoosting", "KNeighbors", "TSR", "OLS", "PAR"):
+        t0 = time.perf_counter()
+        res = suite.evaluate(train_ops, test_ops, n_samples=4,
+                             regressor=name)
+        dt = (time.perf_counter() - t0) * 1e6
+        rows.append(f"table4/{name},{dt:.0f},"
+                    f"accuracy={res['accuracy']:.3f};r2={res['r2']:.3f}")
+    return rows
+
+
+def table5_hillclimb_accuracy() -> list[str]:
+    """Table V: hill-climb prediction accuracy vs probe interval x."""
+    oracle = _oracle(MACHINE)
+    rows = []
+    for model in ("resnet50", "dcgan", "inception_v3"):
+        g = build_paper_graph(model)
+        for x in (2, 4, 8, 16):
+            t0 = time.perf_counter()
+            prof = HillClimbProfiler(oracle, paper_case_lists(), interval=x)
+            store = prof.profile_graph(g)
+            acc = float(np.mean([store.prediction_accuracy(op, oracle)
+                                 for op in g.ops.values()]))
+            dt = (time.perf_counter() - t0) * 1e6
+            rows.append(f"table5/{model}/x{x},{dt:.0f},"
+                        f"accuracy={acc:.4f};probes={store.total_probes}")
+    return rows
+
+
+def table6_per_op_speedup() -> list[str]:
+    """Table VI: per-op-class time, recommendation vs Strategies 1-2."""
+    rows = []
+    for model in ("resnet50", "dcgan", "inception_v3"):
+        g = build_paper_graph(model)
+        rec = uniform_schedule(g, MACHINE, intra=68, inter=1)
+        rt = ConcurrencyRuntime(config=RuntimeConfig(enable_s3=False,
+                                                     enable_s4=False))
+        rt.profile(g)
+        ours = rt.execute_step(g)
+        rec_t = rec.per_class_time()
+        our_t = ours.per_class_time()
+        top = sorted(rec_t.items(), key=lambda kv: -kv[1])[:5]
+        for cls, t_rec in top:
+            t_our = our_t.get(cls, t_rec)
+            rows.append(f"table6/{model}/{cls},{t_our*1e6:.1f},"
+                        f"speedup_vs_rec={t_rec/max(t_our,1e-12):.2f}")
+    return rows
+
+
+def fig3_strategy_ablation() -> list[str]:
+    """Fig 3: cumulative strategy contributions + vs manual tuning."""
+    rows = []
+    for model in ("resnet50", "dcgan", "inception_v3"):
+        g = build_paper_graph(model)
+        base = uniform_schedule(g, MACHINE, intra=68, inter=1).makespan
+
+        def run(s3, s4):
+            rt = ConcurrencyRuntime(config=RuntimeConfig(
+                enable_s3=s3, enable_s4=s4))
+            rt.profile(g)
+            return rt.execute_step(g).makespan
+
+        s12 = run(False, False)
+        s123 = run(True, False)
+        s1234 = run(True, True)
+        manual, cfg = manual_best_schedule(g, MACHINE)
+        rows += [
+            f"fig3/{model}/recommendation,{base*1e6:.0f},speedup=1.00",
+            f"fig3/{model}/S1+S2,{s12*1e6:.0f},speedup={base/s12:.2f}",
+            f"fig3/{model}/S1-3,{s123*1e6:.0f},speedup={base/s123:.2f}",
+            f"fig3/{model}/S1-4,{s1234*1e6:.0f},speedup={base/s1234:.2f}",
+            f"fig3/{model}/manual{cfg},{manual.makespan*1e6:.0f},"
+            f"speedup={base/manual.makespan:.2f}",
+        ]
+    return rows
+
+
+def fig4_corun_events() -> list[str]:
+    """Fig 4: co-running op count, with and without Strategy 4."""
+    rows = []
+    for model in ("resnet50", "dcgan", "inception_v3"):
+        g = build_paper_graph(model)
+        for s4 in (False, True):
+            rt = ConcurrencyRuntime(config=RuntimeConfig(enable_s4=s4))
+            rt.profile(g)
+            res = rt.execute_step(g)
+            peak = max(n for _, n in res.events)
+            rows.append(
+                f"fig4/{model}/{'S3+S4' if s4 else 'S3only'},"
+                f"{res.makespan*1e6:.0f},"
+                f"mean_corun={res.mean_corunning:.2f};peak={peak}")
+    return rows
+
+
+ALL = [fig1_scaling_curves, table1_concurrency_grid, table2_input_size, table3_corun,
+       table4_regression_accuracy, table5_hillclimb_accuracy,
+       table6_per_op_speedup, fig3_strategy_ablation, fig4_corun_events]

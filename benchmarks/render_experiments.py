@@ -1,0 +1,114 @@
+"""Merge dry-run JSONs and render the EXPERIMENTS.md §Roofline table.
+
+Usage: PYTHONPATH=src python benchmarks/render_experiments.py
+Merges experiments/dryrun*.json (later files override earlier records for
+the same (arch, shape, mesh)), writes experiments/dryrun_merged.json and
+prints the markdown table (also appended to EXPERIMENTS.md if --write).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+EXP_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+ARCH_ORDER = ["granite-3-8b", "llama3-405b", "codeqwen1.5-7b", "olmo-1b",
+              "llama4-scout-17b-a16e", "mixtral-8x7b", "rwkv6-1.6b",
+              "llama-3.2-vision-11b", "recurrentgemma-2b", "whisper-small"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def merge() -> dict:
+    records: dict[tuple, dict] = {}
+    files = sorted(glob.glob(os.path.join(EXP_DIR, "dryrun*.json")))
+    files = [f for f in files if "merged" not in f]
+    for path in files:
+        with open(path) as f:
+            for r in json.load(f):
+                key = (r.get("arch"), r.get("shape"),
+                       r.get("mesh_name", r.get("mesh")))
+                # prefer non-error records from later files
+                if key in records and "error" in r \
+                        and "error" not in records[key]:
+                    continue
+                records[key] = r
+    return records
+
+
+def fmt(v, digits=3):
+    return f"{v:.{digits}f}" if isinstance(v, (int, float)) else "-"
+
+
+def table(records: dict) -> str:
+    lines = [
+        "| arch | shape | dom | compute_s | memory_s (est/hlo) | "
+        "collective_s | useful | HBM GiB/dev | fits | multi-pod |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = records.get((arch, shape, "single"))
+            m = records.get((arch, shape, "multi"))
+            if r is None:
+                continue
+            if "skipped" in r:
+                lines.append(f"| {arch} | {shape} | skip | - | - | - | - | "
+                             f"- | - | - |")
+                continue
+            if "error" in r:
+                lines.append(f"| {arch} | {shape} | ERROR | - | - | - | - |"
+                             f" - | - | - |")
+                continue
+            rf = r["roofline"]
+            hbm = r.get("hbm_bytes_per_device_est", 0) / 2**30
+            multi = "-"
+            if m is not None and "error" not in m and "skipped" not in m:
+                multi = "ok" + ("+fits" if m.get("fits_hbm") else "")
+            lines.append(
+                f"| {arch} | {shape} | {rf['dominant'][:4]} "
+                f"| {fmt(rf['compute_s'])} "
+                f"| {fmt(rf['memory_s'])}/{fmt(rf.get('memory_s_hlo'))} "
+                f"| {fmt(rf['collective_s'])} "
+                f"| {fmt(r.get('useful_flops_ratio'))} "
+                f"| {hbm:.1f} | {r.get('fits_hbm')} | {multi} |")
+    return "\n".join(lines)
+
+
+def summary(records: dict) -> str:
+    n_ok = sum(1 for r in records.values()
+               if "error" not in r and "skipped" not in r)
+    n_skip = sum(1 for r in records.values() if "skipped" in r)
+    n_err = sum(1 for r in records.values() if "error" in r)
+    multi_ok = sum(1 for (a, s, mname), r in records.items()
+                   if mname == "multi" and "error" not in r
+                   and "skipped" not in r)
+    return (f"cells: {n_ok} compiled ok, {n_skip} skipped (documented), "
+            f"{n_err} errors; multi-pod compiles ok: {multi_ok}")
+
+
+def main() -> None:
+    records = merge()
+    out = os.path.join(EXP_DIR, "dryrun_merged.json")
+    with open(out, "w") as f:
+        json.dump([{"key": list(k), **v} for k, v in records.items()], f,
+                  indent=1)
+    tbl = table(records)
+    summ = summary(records)
+    print(summ)
+    print(tbl)
+    if "--write" in sys.argv:
+        exp = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+        with open(exp) as f:
+            text = f.read()
+        marker = "## §Roofline table (rendered from experiments/dryrun.json)"
+        head = text.split(marker)[0]
+        with open(exp, "w") as f:
+            f.write(head + marker + "\n\n" + summ + "\n\n" + tbl + "\n")
+        print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Roofline table renderer: reads experiments/dryrun.json and emits the
+per-(arch x shape) roofline rows (EXPERIMENTS.md §Roofline source)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+_EXP = os.path.join(os.path.dirname(__file__), "..", "experiments")
+_MERGED = os.path.join(_EXP, "dryrun_merged.json")
+DEFAULT_PATH = (_MERGED if os.path.exists(_MERGED)
+                else os.path.join(_EXP, "dryrun.json"))
+
+
+def rows_from_records(records: list[dict]) -> list[str]:
+    out = []
+    for r in records:
+        if r.get("mesh_name") != "single":
+            continue
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        if "skipped" in r:
+            out.append(f"{name},0,skipped({r['skipped'][:40]})")
+            continue
+        if "error" in r:
+            out.append(f"{name},0,ERROR")
+            continue
+        rf = r["roofline"]
+        step_us = rf["step_s_overlapped"] * 1e6
+        ratio = r.get("useful_flops_ratio")
+        frac = (min(rf["compute_s"] / rf["step_s_overlapped"], 1.0)
+                if rf["step_s_overlapped"] else 0.0)
+        out.append(
+            f"{name},{step_us:.0f},"
+            f"dom={rf['dominant']};compute_s={rf['compute_s']:.4f};"
+            f"memory_s={rf['memory_s']:.4f};"
+            f"collective_s={rf['collective_s']:.4f};"
+            f"useful_ratio={ratio:.3f};roofline_frac={frac:.3f};"
+            f"fits_hbm={r.get('fits_hbm')}" if ratio else
+            f"{name},{step_us:.0f},dom={rf['dominant']}")
+    return out
+
+
+def roofline_table(path: str = DEFAULT_PATH) -> list[str]:
+    if not os.path.exists(path):
+        return ["roofline/NOT_RUN,0,run python -m repro.launch.dryrun first"]
+    with open(path) as f:
+        records = json.load(f)
+    # merged records carry a "key" field with mesh_name in position 2
+    for r in records:
+        if "mesh_name" not in r and "key" in r:
+            r["mesh_name"] = r["key"][2]
+    return rows_from_records(records)
+
+
+ALL = [roofline_table]

@@ -1,0 +1,23 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import kernel_bench, paper_tables, roofline
+    fns = list(paper_tables.ALL) + list(kernel_bench.ALL) + list(roofline.ALL)
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for fn in fns:
+        if only and only not in fn.__name__:
+            continue
+        try:
+            for row in fn():
+                print(row)
+        except Exception as e:  # noqa: BLE001 - report and continue
+            print(f"{fn.__name__},0,ERROR:{e}")
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,66 @@
+"""The paper's technique on TPU meshes: hill-climb per-op-class shard
+degrees against a roofline cost model, freeze the plan (Strategies 1-2),
+then space-share the model axis between independent op classes
+(Strategy 3 analogue).  Runs the tuner against an analytic v5e roofline
+for a mixtral-style block so it completes in seconds on CPU; the dry-run
+path (repro.launch.dryrun) uses the same tuner with real compiled costs.
+
+Run:  PYTHONPATH=src python examples/autotune_shard.py
+"""
+
+from repro.core import (RooflineMeasurement, ShardDegreeAutotuner,
+                        corun_groups)
+from repro.configs import get_config
+from repro.hw import V5E
+
+CFG = get_config("mixtral-8x7b")
+TOKENS = 4096 * 256 / 256      # tokens per device per step
+
+
+def measure(op_class: str, degree: int, variant: bool
+            ) -> RooflineMeasurement:
+    """Analytic v5e roofline for one op class at a given shard degree."""
+    d, f, e = CFG.d_model, CFG.d_ff, CFG.moe_experts
+    per_tok_flops = {
+        "attention": 2 * d * (CFG.n_heads + 2 * CFG.n_kv_heads) * CFG.hd,
+        "moe": 6 * d * f * CFG.moe_top_k,
+        "embed": 2 * d,
+        "unembed": 2 * d * CFG.vocab / CFG.n_layers,
+    }[op_class]
+    flops = per_tok_flops * TOKENS * CFG.n_layers / degree
+    weight_bytes = {
+        "attention": 4 * d * d * 2 * CFG.n_layers,
+        "moe": 3 * d * f * e * 2 * CFG.n_layers,
+        "embed": CFG.vocab * d * 2,
+        "unembed": CFG.vocab * d * 2,
+    }[op_class] / degree
+    act_bytes = TOKENS * d * 2 * CFG.n_layers
+    coll = (2 * (degree - 1) / max(degree, 1)) * act_bytes if degree > 1 \
+        else 0.0
+    return RooflineMeasurement(
+        compute_s=flops / V5E.peak_bf16_flops,
+        memory_s=(weight_bytes + act_bytes) / V5E.hbm_bandwidth,
+        collective_s=coll / V5E.ici_link_bandwidth)
+
+
+def main() -> None:
+    tuner = ShardDegreeAutotuner(measure, max_degree=16)
+    classes = ["attention", "moe", "embed", "unembed"]
+    plan = tuner.tune(classes)
+    print("frozen per-op-class shard degrees (Strategies 1-2):")
+    for cls, dec in plan.decisions.items():
+        m = dec.predicted
+        print(f"  {cls:10s} degree={dec.degree:2d} "
+              f"compute={m.compute_s*1e3:7.3f}ms "
+              f"coll={m.collective_s*1e3:7.3f}ms  dom={m.bottleneck}")
+    print(f"probes used: {plan.probes} (exhaustive would be "
+          f"{len(classes) * 5})")
+    groups = corun_groups(plan, [["attention", "moe"]], axis_size=16)
+    print("co-run groups (Strategy 3 analogue):")
+    for g in groups:
+        print(f"  {g.members} degrees={g.degrees} "
+              f"makespan={g.makespan*1e3:.3f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Batched serving example: random-weight smoke model, 12 requests through
+the wave-batched engine; reports tokens/s and slot utilization.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import subprocess
+import sys
+
+
+def main() -> None:
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--arch", "mixtral-8x7b", "--smoke",
+           "--requests", "12", "--slots", "4", "--max-new", "16"]
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""llama3-405b [dense]: 126L d16384 128H (GQA kv=8) ff53248 vocab128256.
+[arXiv:2407.21783; unverified]
+
+Optimizer-state dtype is bf16 for this arch (m/v moments): fp32 moments
+for 405B params exceed 16 GiB/chip HBM on a single 256-chip pod; bf16
+moments + fp32 master-free AdamW keeps the train_4k cell resident
+(see EXPERIMENTS.md memory analysis)."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="llama3-405b", family="dense", n_layers=126, d_model=16384,
+    n_heads=128, n_kv_heads=8, d_ff=53248, vocab=128256, head_dim=128,
+    norm="rms", act="swiglu", param_dtype="bfloat16", rope_theta=500000.0)
+
+SMOKE = ModelConfig(
+    arch_id="llama3-405b-smoke", family="dense", n_layers=3, d_model=128,
+    n_heads=8, n_kv_heads=2, d_ff=256, vocab=512, head_dim=16,
+    norm="rms", act="swiglu", dtype="float32", param_dtype="float32")

@@ -1,0 +1,46 @@
+"""Core library: the paper's runtime concurrency control + op scheduling.
+
+Faithful pieces (paper SIII):
+  graph        -- dataflow op-graph IR the runtime schedules
+  perfmodel    -- hill-climbing performance model + regression baseline
+  concurrency  -- Strategies 1-2 (per-op parallelism, hysteresis)
+  scheduler    -- Strategies 3-4 (co-run admission, hyper-thread lane)
+  interference -- co-run slowdown blacklist (SIII-D discussion)
+  simmachine   -- deterministic KNL-like cost oracle (see DESIGN.md A4)
+  runtime      -- profile->freeze->schedule driver, real-payload executor
+
+TPU adaptation (DESIGN.md S2):
+  autotune     -- shard-degree hill climbing on compiled roofline cost
+"""
+
+from repro.core.graph import Op, OpGraph, GraphBuilder, build_paper_graph, \
+    build_transformer_step_graph, PAPER_INPUT_SIZES
+from repro.core.perfmodel import (
+    CurveModel, HillClimbProfiler, ProfileStore, RegressionSuite,
+    paper_case_lists, power_of_two_cases, REGRESSORS)
+from repro.core.concurrency import ConcurrencyController, ConcurrencyPlan, OpPlan
+from repro.core.scheduler import (
+    CorunScheduler, ScheduleResult, ScheduledOp, uniform_schedule,
+    manual_best_schedule)
+from repro.core.interference import InterferenceRecorder
+from repro.core.simmachine import SimMachine, Placement
+from repro.core.runtime import (
+    ConcurrencyRuntime, RuntimeConfig, TrainingSummary, RealGraphExecutor)
+from repro.core.autotune import (
+    RooflineMeasurement, ShardDegreeAutotuner, ShardDecision,
+    ShardPlanResult, corun_groups, CorunGroup)
+
+__all__ = [
+    "Op", "OpGraph", "GraphBuilder", "build_paper_graph",
+    "build_transformer_step_graph", "PAPER_INPUT_SIZES",
+    "CurveModel", "HillClimbProfiler", "ProfileStore", "RegressionSuite",
+    "paper_case_lists", "power_of_two_cases", "REGRESSORS",
+    "ConcurrencyController", "ConcurrencyPlan", "OpPlan",
+    "CorunScheduler", "ScheduleResult", "ScheduledOp", "uniform_schedule",
+    "manual_best_schedule", "InterferenceRecorder",
+    "SimMachine", "Placement",
+    "ConcurrencyRuntime", "RuntimeConfig", "TrainingSummary",
+    "RealGraphExecutor",
+    "RooflineMeasurement", "ShardDegreeAutotuner", "ShardDecision",
+    "ShardPlanResult", "corun_groups", "CorunGroup",
+]

@@ -1,0 +1,54 @@
+"""Co-run interference recording (paper §III-D "Discussion").
+
+The performance model predicts SOLO op times; co-running ops contend for
+memory bandwidth, so observed times can exceed predictions.  The paper's
+runtime "can record such cases and avoid co-running such operations in the
+future training steps".  ``InterferenceRecorder`` implements exactly that:
+per co-run pair (unordered op-class pair), track the observed slowdown
+ratio; pairs whose EMA slowdown exceeds ``threshold`` are blacklisted and
+the scheduler refuses to co-run them again.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+def _pair_key(a: str, b: str) -> tuple[str, str]:
+    return (a, b) if a <= b else (b, a)
+
+
+@dataclasses.dataclass
+class InterferenceRecorder:
+    threshold: float = 1.35       # blacklist pairs slower than 35% over solo
+    ema_alpha: float = 0.4
+
+    def __post_init__(self) -> None:
+        self._ema: dict[tuple[str, str], float] = {}
+        self._count: dict[tuple[str, str], int] = {}
+
+    def record(self, cls_a: str, cls_b: str, predicted: float,
+               observed: float) -> None:
+        """Record one co-run observation of op with class ``cls_a`` running
+        alongside ``cls_b``: predicted = solo model time, observed = actual."""
+        key = _pair_key(cls_a, cls_b)
+        ratio = observed / max(predicted, 1e-12)
+        prev = self._ema.get(key, ratio)
+        self._ema[key] = (1 - self.ema_alpha) * prev + self.ema_alpha * ratio
+        self._count[key] = self._count.get(key, 0) + 1
+
+    def slowdown(self, cls_a: str, cls_b: str) -> float:
+        return self._ema.get(_pair_key(cls_a, cls_b), 1.0)
+
+    def blacklisted(self, cls_a: str, cls_b: str) -> bool:
+        return self.slowdown(cls_a, cls_b) > self.threshold
+
+    def compatible(self, cls_a: str, running_classes: list[str]) -> bool:
+        return not any(self.blacklisted(cls_a, r) for r in running_classes)
+
+    @property
+    def observations(self) -> int:
+        return sum(self._count.values())
+
+    def report(self) -> dict[tuple[str, str], float]:
+        return dict(self._ema)

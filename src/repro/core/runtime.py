@@ -1,0 +1,192 @@
+"""The runtime driver — the paper's Fig. 2 workflow.
+
+``ConcurrencyRuntime`` glues the pieces together exactly in the paper's
+order: the first N training steps run ops serially while the hill-climbing
+profiler measures them (profiling steps); the resulting curves freeze a
+``ConcurrencyPlan`` (Strategies 1-2); every subsequent step executes under
+the co-run scheduler (Strategies 3-4).  The same step graph is reused
+across steps (the paper's stable-step observation, §II-A), so profiling
+cost amortizes over thousands of steps.
+
+Two executors:
+
+* the **simulated executor** (``SimMachine``-timed) validates the decision
+  logic deterministically — this is what the paper-table benchmarks use;
+* ``RealGraphExecutor`` runs op payloads (real jitted JAX callables) on a
+  worker pool with dependency tracking — used by the examples and
+  integration tests to show the runtime drives real computation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+
+from repro.core.concurrency import ConcurrencyController, ConcurrencyPlan
+from repro.core.graph import Op, OpGraph
+from repro.core.interference import InterferenceRecorder
+from repro.core.perfmodel import HillClimbProfiler, ProfileStore, paper_case_lists
+from repro.core.scheduler import CorunScheduler, ScheduleResult, uniform_schedule
+from repro.core.simmachine import Placement, SimMachine
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    interval: int = 4               # hill-climb probe interval x
+    candidates: int = 3             # Strategy 3 candidate count
+    max_deviation: int = 2          # Strategy 2 clamp (paper's empirical 2)
+    enable_s3: bool = True
+    enable_s4: bool = True
+    strategy2: bool = True
+    max_ht_corunners: int = 2
+    interference_threshold: float = 1.35
+
+
+@dataclasses.dataclass
+class TrainingSummary:
+    profiling_steps: int
+    profiling_time: float           # serial time spent probing
+    step_time: float                # steady-state scheduled step time
+    baseline_step_time: float       # TF-recommendation uniform schedule
+    total_steps: int
+
+    @property
+    def speedup(self) -> float:
+        return self.baseline_step_time / self.step_time
+
+    @property
+    def total_time(self) -> float:
+        return self.profiling_time + self.step_time * max(
+            0, self.total_steps - self.profiling_steps)
+
+    @property
+    def profiling_overhead(self) -> float:
+        return self.profiling_time / max(self.total_time, 1e-12)
+
+
+class ConcurrencyRuntime:
+    def __init__(self, machine: SimMachine | None = None,
+                 config: RuntimeConfig | None = None):
+        self.machine = machine or SimMachine()
+        self.config = config or RuntimeConfig()
+        self.store: ProfileStore | None = None
+        self.plan: ConcurrencyPlan | None = None
+        self.controller: ConcurrencyController | None = None
+        self.recorder = InterferenceRecorder(
+            threshold=self.config.interference_threshold)
+
+    # ---- phase 1: profiling steps -------------------------------------
+    def _measure(self, op: Op, threads: int, variant: bool) -> float:
+        return self.machine.op_time(
+            op, Placement(threads, cache_sharing=variant))
+
+    def profile(self, graph: OpGraph) -> ProfileStore:
+        profiler = HillClimbProfiler(
+            measure=self._measure,
+            case_lists=paper_case_lists(self.machine.spec.cores,
+                                        self.machine.spec.tiles),
+            interval=self.config.interval)
+        self.store = profiler.profile_graph(graph)
+        self.controller = ConcurrencyController(
+            self.store, max_deviation=self.config.max_deviation,
+            default_threads=self.machine.spec.cores,
+            interval=self.config.interval)
+        self.plan = self.controller.build_plan(graph)
+        return self.store
+
+    def profiling_cost(self) -> tuple[int, float]:
+        """(#profiling steps, serial seconds spent probing).
+
+        The paper bounds N <= C/x * 2; each probing step runs every op once
+        serially at that step's concurrency."""
+        assert self.store is not None
+        probes_per_curve = [c.probes for c in self.store.curves.values()]
+        n_steps = max(probes_per_curve) if probes_per_curve else 0
+        probe_time = sum(y for c in self.store.curves.values()
+                         for pts in c.samples.values() for _, y in pts)
+        return n_steps, probe_time
+
+    # ---- phase 2: scheduled steps --------------------------------------
+    def scheduler(self) -> CorunScheduler:
+        assert self.plan is not None and self.controller is not None
+        return CorunScheduler(
+            self.machine, self.controller, self.plan,
+            recorder=self.recorder,
+            enable_s3=self.config.enable_s3,
+            enable_s4=self.config.enable_s4,
+            strategy2=self.config.strategy2,
+            max_ht_corunners=self.config.max_ht_corunners,
+            candidates=self.config.candidates)
+
+    def execute_step(self, graph: OpGraph) -> ScheduleResult:
+        if self.plan is None:
+            self.profile(graph)
+        return self.scheduler().run(graph)
+
+    # ---- end-to-end ------------------------------------------------------
+    def train(self, graph: OpGraph, total_steps: int = 1000,
+              baseline_intra: int | None = None) -> TrainingSummary:
+        self.profile(graph)
+        n_steps, probe_time = self.profiling_cost()
+        result = self.execute_step(graph)
+        baseline = uniform_schedule(
+            graph, self.machine,
+            intra=baseline_intra or self.machine.spec.cores, inter=1)
+        return TrainingSummary(
+            profiling_steps=n_steps,
+            profiling_time=probe_time,
+            step_time=result.makespan,
+            baseline_step_time=baseline.makespan,
+            total_steps=total_steps)
+
+
+# ---------------------------------------------------------------------------
+# Real-payload executor
+# ---------------------------------------------------------------------------
+
+class RealGraphExecutor:
+    """Dependency-ordered execution of op payloads on a worker pool.
+
+    ``op.payload`` is ``fn(dep_results: dict[uid, value]) -> value``.  The
+    worker count plays the role of inter-op parallelism; per-op results are
+    returned with wall-clock timings so the runtime's decisions can be
+    validated against real JAX computations."""
+
+    def __init__(self, max_workers: int = 2):
+        self.max_workers = max_workers
+
+    def run(self, graph: OpGraph) -> tuple[dict[int, object], dict[int, float], float]:
+        results: dict[int, object] = {}
+        timings: dict[int, float] = {}
+        pending = {u: len(op.deps) for u, op in graph.ops.items()}
+        ready = [u for u, n in pending.items() if n == 0]
+        t0 = time.perf_counter()
+        with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
+            futures: dict[Future, int] = {}
+
+            def submit(uid: int) -> None:
+                op = graph.ops[uid]
+                deps = {d: results[d] for d in op.deps}
+
+                def call(op=op, deps=deps):
+                    ts = time.perf_counter()
+                    out = op.payload(deps) if op.payload else None
+                    return out, time.perf_counter() - ts
+
+                futures[pool.submit(call)] = uid
+
+            for u in ready:
+                submit(u)
+            while futures:
+                done, _ = wait(list(futures), return_when=FIRST_COMPLETED)
+                for fut in done:
+                    uid = futures.pop(fut)
+                    out, dt = fut.result()
+                    results[uid] = out
+                    timings[uid] = dt
+                    for c in graph.consumers(uid):
+                        pending[c] -= 1
+                        if pending[c] == 0:
+                            submit(c)
+        return results, timings, time.perf_counter() - t0

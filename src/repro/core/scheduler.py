@@ -1,0 +1,339 @@
+"""Operation scheduling — the paper's Strategies 3 and 4 (§III-D).
+
+``CorunScheduler`` is an event-driven list scheduler over an ``OpGraph``:
+
+* **Strategy 3** — whenever cores idle, examine ready ops; for each, take
+  its top-3 modeled candidates (threads, affinity, predicted time); a
+  candidate is *admissible* if it (a) fits the idle cores, (b) does not
+  outlast the longest-remaining ongoing op (throughput guard), (c) is not
+  interference-blacklisted against the running classes.  Among admissible
+  candidates of an op, pick the FEWEST threads (the paper deliberately
+  leaves cores free to admit more co-runners).  If nothing is admissible
+  and the machine is idle, run the most time-consuming ready op at its
+  frozen plan.
+* **Strategy 4** — when the running set occupies every physical core, admit
+  the smallest ready ops (shortest serial time) onto the hyper-thread lane.
+* Strategy 2 interaction — every launch decision is clamped by
+  ``ConcurrencyPlan.clamp`` (deviation > 2 cases falls back to class plan).
+
+Baselines for the paper's Table I / Fig 3 comparisons:
+
+* ``uniform_schedule`` — TensorFlow-style: fixed (inter-op, intra-op)
+  parallelism, FIFO ready queue, oversubscription penalty when
+  inter*intra exceeds physical cores.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from collections import deque
+
+from repro.core.concurrency import ConcurrencyPlan, ConcurrencyController, OpPlan
+from repro.core.graph import Op, OpGraph
+from repro.core.interference import InterferenceRecorder
+from repro.core.simmachine import Placement, SimMachine
+
+
+@dataclasses.dataclass
+class ScheduledOp:
+    op: Op
+    threads: int
+    variant: bool
+    hyper: bool
+    start: float
+    finish: float
+    predicted: float
+
+    @property
+    def duration(self) -> float:
+        return self.finish - self.start
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    makespan: float
+    records: list[ScheduledOp]
+    events: list[tuple[float, int]]      # (time, #co-running) — paper Fig 4
+    profiling_probes: int = 0
+
+    @property
+    def mean_corunning(self) -> float:
+        if not self.events:
+            return 0.0
+        return sum(n for _, n in self.events) / len(self.events)
+
+    def per_class_time(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for r in self.records:
+            out[r.op.op_class] = out.get(r.op.op_class, 0.0) + r.duration
+        return out
+
+
+class _EventSim:
+    """Shared discrete-event machinery."""
+
+    def __init__(self, graph: OpGraph):
+        self.graph = graph
+        self.pending = {u: len(op.deps) for u, op in graph.ops.items()}
+        self.ready: deque[int] = deque(sorted(graph.sources()))
+        self.heap: list[tuple[float, int, int]] = []   # (finish, seq, uid)
+        self.running: dict[int, ScheduledOp] = {}
+        self.clock = 0.0
+        self.records: list[ScheduledOp] = []
+        self.events: list[tuple[float, int]] = []
+        self._seq = itertools.count()
+
+    def launch(self, uid: int, sched: ScheduledOp) -> None:
+        self.running[uid] = sched
+        heapq.heappush(self.heap, (sched.finish, next(self._seq), uid))
+        self.events.append((self.clock, len(self.running)))
+
+    def complete_next(self) -> ScheduledOp:
+        finish, _, uid = heapq.heappop(self.heap)
+        self.clock = finish
+        sched = self.running.pop(uid)
+        self.records.append(sched)
+        for c in self.graph.consumers(uid):
+            self.pending[c] -= 1
+            if self.pending[c] == 0:
+                self.ready.append(c)
+        self.events.append((self.clock, len(self.running)))
+        return sched
+
+    @property
+    def done(self) -> bool:
+        return not self.ready and not self.running
+
+
+class CorunScheduler:
+    def __init__(self, machine: SimMachine, controller: ConcurrencyController,
+                 plan: ConcurrencyPlan, *,
+                 recorder: InterferenceRecorder | None = None,
+                 total_cores: int | None = None,
+                 enable_s3: bool = True, enable_s4: bool = True,
+                 strategy2: bool = True, max_ht_corunners: int = 2,
+                 candidates: int = 3, min_fallback_cores: int = 4):
+        self.machine = machine
+        self.controller = controller
+        self.plan = plan
+        self.recorder = recorder if recorder is not None else InterferenceRecorder()
+        self.cores = total_cores or machine.spec.cores
+        self.enable_s3 = enable_s3
+        self.enable_s4 = enable_s4
+        self.strategy2 = strategy2
+        self.max_ht = max_ht_corunners
+        self.k = candidates
+        self.min_fallback_cores = min_fallback_cores
+        self.fallback_slack = 1.25
+
+    # ------------------------------------------------------------------
+    def _bw_share(self, threads: int, sim: _EventSim) -> float:
+        total = threads + sum(r.threads for r in sim.running.values())
+        return max(0.25, threads / max(total, 1))
+
+    def _duration(self, op: Op, plan: OpPlan, hyper: bool,
+                  sim: _EventSim) -> float:
+        pl = Placement(plan.threads, cache_sharing=plan.variant,
+                       hyper_thread=hyper)
+        return self.machine.op_time(op, pl,
+                                    bw_share=self._bw_share(plan.threads, sim))
+
+    def _launch(self, sim: _EventSim, uid: int, plan: OpPlan,
+                hyper: bool) -> None:
+        op = sim.graph.ops[uid]
+        dur = self._duration(op, plan, hyper, sim)
+        sched = ScheduledOp(op=op, threads=plan.threads, variant=plan.variant,
+                            hyper=hyper, start=sim.clock,
+                            finish=sim.clock + dur,
+                            predicted=plan.predicted_time)
+        sim.launch(uid, sched)
+        # interference bookkeeping: observed co-run duration vs solo model
+        for other in sim.running.values():
+            if other.op.uid != uid:
+                self.recorder.record(op.op_class, other.op.op_class,
+                                     plan.predicted_time, dur)
+
+    def _free_cores(self, sim: _EventSim) -> int:
+        used = sum(r.threads for r in sim.running.values() if not r.hyper)
+        return max(0, self.cores - used)
+
+    def _instance_plan(self, op: Op) -> OpPlan:
+        base = self.plan.plan_for(op, strategy2=self.strategy2)
+        # predicted time must be instance-specific: re-predict from curve
+        curve = self.controller.store.curve(op)
+        return OpPlan(base.threads, base.variant,
+                      curve.predict(base.threads, base.variant))
+
+    # ------------------------------------------------------------------
+    def _try_corun(self, sim: _EventSim) -> bool:
+        """Strategy 3: admit one ready op into idle cores. True if launched."""
+        free = self._free_cores(sim)
+        if free <= 0 or not sim.ready:
+            return False
+        running_classes = [r.op.op_class for r in sim.running.values()]
+        horizon = max((r.finish - sim.clock for r in sim.running.values()),
+                      default=float("inf"))
+        # examine ready ops, prefer the most expensive first (they gate the
+        # critical path)
+        order = sorted(sim.ready,
+                       key=lambda u: -self._instance_plan(sim.graph.ops[u])
+                       .predicted_time)
+        for uid in order:
+            op = sim.graph.ops[uid]
+            if not self.recorder.compatible(op.op_class, running_classes):
+                continue
+            cands = self.controller.candidates_for(op, self.k)
+            admissible = [c for c in cands
+                          if c.threads <= free and c.predicted_time <= horizon]
+            if not admissible:
+                continue
+            # fewest threads — maximize further co-running (paper's example)
+            pick = min(admissible, key=lambda c: c.threads)
+            pick = self.plan.clamp(op, pick)
+            if pick.threads > free:
+                continue
+            sim.ready.remove(uid)
+            self._launch(sim, uid, pick, hyper=False)
+            return True
+        return False
+
+    def _run_biggest(self, sim: _EventSim) -> bool:
+        """Fallback: most time-consuming ready op at its frozen plan.
+
+        When other ops are running, the clamped-to-idle-cores launch must
+        still respect the throughput guard (with a little slack for
+        contention): squeezing a big op into a few leftover cores makes it
+        outlast everything and hurts throughput — better to wait."""
+        if not sim.ready:
+            return False
+        free = self._free_cores(sim)
+        if free <= 0 or (sim.running and free < self.min_fallback_cores):
+            return False
+        uid = max(sim.ready, key=lambda u: self._instance_plan(
+            sim.graph.ops[u]).predicted_time)
+        op = sim.graph.ops[uid]
+        plan = self._instance_plan(op)
+        if plan.threads > free:
+            plan = OpPlan(free, plan.variant,
+                          self.controller.store.curve(op).predict(
+                              free, plan.variant))
+        if sim.running:
+            horizon = max(r.finish - sim.clock for r in sim.running.values())
+            if plan.predicted_time > horizon * self.fallback_slack:
+                return False
+        sim.ready.remove(uid)
+        self._launch(sim, uid, plan, hyper=False)
+        return True
+
+    def _try_hyper(self, sim: _EventSim) -> bool:
+        """Strategy 4: free physical cores exhausted — run the smallest
+        ready ops on the hyper-thread lane."""
+        if not self.enable_s4 or not sim.ready:
+            return False
+        if self._free_cores(sim) > 0:
+            return False
+        ht_running = sum(1 for r in sim.running.values() if r.hyper)
+        if ht_running >= self.max_ht:
+            return False
+        running_classes = [r.op.op_class for r in sim.running.values()]
+        # smallest = shortest serial-execution time (threads=1 prediction)
+        def serial_time(u: int) -> float:
+            op = sim.graph.ops[u]
+            return self.controller.store.curve(op).predict(1, False)
+        order = sorted(sim.ready, key=serial_time)
+        for uid in order:
+            op = sim.graph.ops[uid]
+            if not self.recorder.compatible(op.op_class, running_classes):
+                continue
+            inst = self._instance_plan(op)
+            plan = OpPlan(min(inst.threads, self.cores), inst.variant,
+                          inst.predicted_time)
+            sim.ready.remove(uid)
+            self._launch(sim, uid, plan, hyper=True)
+            return True
+        return False
+
+    # ------------------------------------------------------------------
+    def run(self, graph: OpGraph) -> ScheduleResult:
+        sim = _EventSim(graph)
+        while not sim.done:
+            launched = True
+            while launched:
+                launched = False
+                if self.enable_s3:
+                    if sim.running:
+                        launched = self._try_corun(sim)
+                        if not launched:
+                            # paper fallback: no candidate fits without
+                            # decreasing throughput -> run the most
+                            # time-consuming ready op in the idle cores
+                            launched = self._run_biggest(sim)
+                    else:
+                        launched = self._run_biggest(sim)
+                elif not sim.running:
+                    # Strategies 1-2 only: serial execution with per-op
+                    # tuned concurrency (the paper's Fig 3.a configuration)
+                    launched = self._run_biggest(sim)
+                if not launched:
+                    launched = self._try_hyper(sim)
+            if sim.running:
+                sim.complete_next()
+        return ScheduleResult(makespan=sim.clock, records=sim.records,
+                              events=sim.events)
+
+
+# ---------------------------------------------------------------------------
+# TensorFlow-style baseline: fixed inter/intra parallelism, FIFO.
+# ---------------------------------------------------------------------------
+
+def _oversubscription_penalty(total_threads: int, cores: int) -> float:
+    r = total_threads / cores
+    if r <= 1.0:
+        return 1.0
+    return 0.45 + 0.55 * r      # calibrated to the paper's Table I ratios
+
+
+def uniform_schedule(graph: OpGraph, machine: SimMachine, *,
+                     intra: int, inter: int,
+                     cache_sharing: bool = True) -> ScheduleResult:
+    """Fixed (inter, intra) FIFO execution — the paper's baseline runtime.
+
+    ``inter`` concurrent lanes, every op with ``intra`` threads.  If
+    inter*intra oversubscribes the physical cores, every running op pays
+    the oversubscription penalty (thread time-slicing + management)."""
+    sim = _EventSim(graph)
+    penalty = _oversubscription_penalty(
+        inter * intra, machine.spec.cores)
+    while not sim.done:
+        while sim.ready and len(sim.running) < inter:
+            uid = sim.ready.popleft()              # FIFO, as TF's executor
+            op = graph.ops[uid]
+            n_running = len(sim.running) + 1
+            pl = Placement(min(intra, machine.spec.cores),
+                           cache_sharing=cache_sharing)
+            dur = machine.op_time(op, pl, bw_share=1.0 / n_running) * penalty
+            sched = ScheduledOp(op=op, threads=intra, variant=cache_sharing,
+                                hyper=False, start=sim.clock,
+                                finish=sim.clock + dur, predicted=dur)
+            sim.launch(uid, sched)
+        if sim.running:
+            sim.complete_next()
+    return ScheduleResult(makespan=sim.clock, records=sim.records,
+                          events=sim.events)
+
+
+def manual_best_schedule(graph: OpGraph, machine: SimMachine,
+                         inters: tuple[int, ...] = (1, 2, 4),
+                         intras: tuple[int, ...] = (17, 34, 68)
+                         ) -> tuple[ScheduleResult, tuple[int, int]]:
+    """The paper's 'manual optimization': exhaustive uniform grid search."""
+    best: tuple[ScheduleResult, tuple[int, int]] | None = None
+    for inter in inters:
+        for intra in intras:
+            res = uniform_schedule(graph, machine, intra=intra, inter=inter)
+            if best is None or res.makespan < best[0].makespan:
+                best = (res, (inter, intra))
+    assert best is not None
+    return best

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (DataConfig, SyntheticLM, MmapTokens,
+                                 make_source, Prefetcher)
+__all__ = ["DataConfig", "SyntheticLM", "MmapTokens", "make_source",
+           "Prefetcher"]

@@ -1,0 +1,94 @@
+"""Hardware model constants and roofline arithmetic.
+
+Two machines are modeled:
+
+* ``TpuV5eSpec`` — the deployment TARGET. All roofline terms in
+  EXPERIMENTS.md are derived against these constants (values fixed by the
+  task spec: 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI).
+
+* ``KnlLikeSpec`` — a deterministic stand-in for the paper's Intel Knights
+  Landing socket (68 cores, 34 tiles x 2 cores sharing 1 MB L2, 4 HW
+  threads/core).  Used exclusively by ``core.simmachine`` to give the
+  faithful op-graph reproduction a concrete cost oracle; never used for the
+  TPU roofline numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuV5eSpec:
+    """Per-chip TPU v5e numbers used for the three roofline terms."""
+
+    name: str = "tpu_v5e"
+    peak_bf16_flops: float = 197e12      # FLOP/s per chip (MXU)
+    hbm_bandwidth: float = 819e9         # B/s per chip
+    ici_link_bandwidth: float = 50e9     # B/s per ICI link (intra-pod)
+    dci_link_bandwidth: float = 12.5e9   # B/s effective per pod-crossing link
+    hbm_bytes: int = 16 * 1024**3        # 16 GiB HBM per chip
+    vmem_bytes: int = 128 * 1024**2      # ~128 MiB VMEM (v5e ~ 48-128 MiB usable)
+    mxu_tile: int = 128                  # systolic array native dim
+
+    # ---- roofline terms (seconds) -------------------------------------
+    def compute_time(self, flops_per_device: float) -> float:
+        return flops_per_device / self.peak_bf16_flops
+
+    def memory_time(self, bytes_per_device: float) -> float:
+        return bytes_per_device / self.hbm_bandwidth
+
+    def collective_time(self, ici_bytes_per_device: float,
+                        dci_bytes_per_device: float = 0.0) -> float:
+        return (ici_bytes_per_device / self.ici_link_bandwidth
+                + dci_bytes_per_device / self.dci_link_bandwidth)
+
+    def step_time(self, flops: float, bytes_: float, ici_bytes: float,
+                  dci_bytes: float = 0.0, overlap: bool = True) -> float:
+        """Roofline step-time estimate.
+
+        ``overlap=True`` models perfectly overlapped compute/memory/comm
+        (the bound is the max term); ``overlap=False`` is the pessimistic
+        serial sum. Real executions land between the two.
+        """
+        terms = (self.compute_time(flops), self.memory_time(bytes_),
+                 self.collective_time(ici_bytes, dci_bytes))
+        return max(terms) if overlap else sum(terms)
+
+
+@dataclasses.dataclass(frozen=True)
+class KnlLikeSpec:
+    """Machine model for the paper's KNL socket (Xeon Phi 7250).
+
+    Only what the scheduling reproduction needs: core/tile/HW-thread
+    topology and enough bandwidth/latency structure for a convex
+    time-vs-threads curve (the paper's Fig. 1 / Observation 1).
+    """
+
+    name: str = "knl_7250"
+    cores: int = 68
+    tiles: int = 34                       # 2 cores per tile share 1MB L2
+    hw_threads_per_core: int = 4
+    l2_bytes_per_tile: int = 1 * 1024**2
+    mcdram_bandwidth: float = 450e9       # B/s (cache mode, ~STREAM)
+    core_flops: float = 41.6e9            # 2x AVX-512 FMA @ ~1.3GHz
+    thread_spawn_us: float = 4.0          # per-op thread wake/sync overhead
+    sync_serialization: float = 0.005     # per-thread serialized sync share
+    chunk_elems: int = 30000              # elems per independent work chunk:
+                                          # an op with E elems exposes at most
+                                          # ceil(E/chunk_elems) useful threads
+                                          # (MKL-DNN loop-blocking structure)
+    hyper_thread_efficiency: float = 0.55 # 2nd HW thread relative throughput
+
+    @property
+    def logical_cpus(self) -> int:
+        return self.cores * self.hw_threads_per_core
+
+
+V5E = TpuV5eSpec()
+KNL = KnlLikeSpec()
+
+
+def dominant_term(compute_s: float, memory_s: float, collective_s: float) -> str:
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    return max(terms, key=terms.get)

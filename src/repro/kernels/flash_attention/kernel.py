@@ -1,0 +1,141 @@
+"""Flash attention Pallas-TPU kernel: online-softmax tiling in VMEM.
+
+TPU adaptation notes (DESIGN.md §2): FlashAttention's CUDA formulation
+(shared-memory tiles + warp reductions) is re-tiled for the TPU memory
+hierarchy — HBM->VMEM block copies driven by BlockSpec index maps, MXU-
+aligned (128) q/k tiles, fp32 accumulators in VMEM scratch that persist
+across the innermost (k-block) grid dimension.  Fully-masked k-blocks
+(above the causal diagonal / outside the sliding window) skip their
+compute via ``pl.when``.
+
+Grid: (batch, q_heads, q_blocks, k_blocks), k innermost so the scratch
+(m, l, acc) carries the online softmax state for one q tile.
+GQA: the k/v BlockSpec index maps fold the q head onto its kv group —
+kv tiles are fetched once per group without materializing repeats in HBM.
+
+Scratch follows the TPU convention of lane-broadcast row stats:
+m/l are (block_q, 128) with the statistic replicated across lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               block_q: int, block_k: int, seq_len: int, causal: bool,
+               window: int | None, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block-level skip: entirely above causal diagonal or outside window
+    run = k_start < seq_len
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+    if window is not None:
+        run = jnp.logical_and(run,
+                              k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = kpos < seq_len
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        # fully-masked rows: keep p exactly zero (exp(NEG_INF-m) underflows
+        # already, but guard the all-masked-row case where m_new == NEG_INF)
+        p = jnp.where(m_new[:, None] == NEG_INF, 0.0, p)
+        alpha = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+        l_ref[...] = (l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
+                      )[:, None] * jnp.ones((1, LANES), jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new[:, None] * jnp.ones((1, LANES), jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        l = l_ref[:, 0]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B,S,H,D); k/v: (B,S,K,D). Returns (B,S,H,D)."""
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    assert h % kh == 0, (h, kh)
+    group = h // kh
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    nq = s // block_q
+    nk = s // block_k
+    scale = 1.0 / math.sqrt(d)
+
+    qt = jnp.swapaxes(q, 1, 2)          # (B,H,S,D)
+    kt = jnp.swapaxes(k, 1, 2)          # (B,K,S,D)
+    vt = jnp.swapaxes(v, 1, 2)
+
+    kernel = functools.partial(
+        _fa_kernel, block_q=block_q, block_k=block_k, seq_len=s,
+        causal=causal, window=window, scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, q_, k_, g=group: (b_, h_ // g, k_, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, q_, k_, g=group: (b_, h_ // g, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANES), jnp.float32),   # running max
+            pltpu.VMEM((block_q, LANES), jnp.float32),   # running sum
+            pltpu.VMEM((block_q, d), jnp.float32),       # accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the RG-LRU recurrence: exact per-step scan.
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * x_t   (elementwise over channels)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(a: jax.Array, x: jax.Array, h0: jax.Array | None = None
+              ) -> tuple[jax.Array, jax.Array]:
+    """a, x: (B,S,R), a in (0,1). Returns (h (B,S,R), h_last (B,R))."""
+    af = a.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - af * af, 1e-12)) * xf
+    h_init = (jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+              if h0 is None else h0.astype(jnp.float32))
+
+    def step(h, xs):
+        a_t, b_t = xs
+        h = a_t * h + b_t
+        return h, h
+
+    hs_last, hs = jax.lax.scan(step, h_init,
+                               (jnp.moveaxis(af, 1, 0), jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype), hs_last

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the WKV6 recurrence: exact per-step scan.
+
+S_t = diag(w_t) S_{t-1} + k_t v_t^T
+out_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, state0: jax.Array | None = None
+             ) -> tuple[jax.Array, jax.Array]:
+    """r,k,v,w: (B,H,S,D); u: (H,D). Returns (out (B,H,S,D), S (B,H,D,D))."""
+    b, h, s, d = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    S0 = (jnp.zeros((b, h, d, d), jnp.float32) if state0 is None
+          else state0.astype(jnp.float32))
+
+    def step(S, xs):
+        r_t, k_t, v_t, w_t = xs            # (B,H,D)
+        kv = jnp.einsum("bhd,bhv->bhdv", k_t, v_t)
+        out = jnp.einsum("bhd,bhdv->bhv", r_t,
+                         S + uf[None, :, :, None] * kv)
+        S = S * w_t[..., None] + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(x, 2, 0) for x in (rf, kf, vf, wf))
+    S, outs = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(outs, 0, 2).astype(r.dtype), S

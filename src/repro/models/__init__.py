@@ -1,0 +1,6 @@
+from repro.models.common import (ModelConfig, ShardingPlan, default_plan,
+                                 replicated_plan, TreeBuilder, tree_bytes,
+                                 cast_tree)
+
+__all__ = ["ModelConfig", "ShardingPlan", "default_plan", "replicated_plan",
+           "TreeBuilder", "tree_bytes", "cast_tree"]

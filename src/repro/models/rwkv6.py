@@ -1,0 +1,241 @@
+"""RWKV6 "Finch" (arXiv:2404.05892) — attention-free LM with
+data-dependent decay.
+
+Per layer: a time-mix block (token-shift ddlerp -> r/k/v/w/g projections,
+WKV6 matrix-state recurrence, group-norm + gated output) and a channel-mix
+block (token-shift, squared-relu FFN).  The WKV recurrence is the chunked
+linear attention in ``layers.rwkv6_linear_attention``; the Pallas kernel
+(kernels/rwkv6) implements the same math with VMEM tiling.
+
+State for serving: per layer, the (B,H,D,D) fp32 matrix state plus the
+previous-token activations for both token-shifts — O(1) in sequence
+length, which is why this arch runs the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.common import ModelConfig, TreeBuilder
+
+LORA_R = 32          # low-rank size of the ddlerp/decay LoRAs
+
+
+def _build(cfg: ModelConfig, key, abstract: bool):
+    tb = TreeBuilder(cfg, key, abstract=abstract)
+    d, nl = cfg.d_model, cfg.n_layers
+    n_heads = cfg.n_heads
+    hd = d // n_heads
+    assert n_heads * hd == d
+
+    tb.leaf("embed/table", (cfg.padded_vocab, d), ("vocab", "table_d"), scale=0.02)
+    # time-mix
+    tb.leaf("layers/tm_norm", (nl, d), ("layers", None), init="zeros")
+    tb.leaf("layers/tm_mu", (nl, 5, d), ("layers", None, None), init="zeros")
+    tb.leaf("layers/tm_lora_a", (nl, d, 5 * LORA_R),
+            ("layers", "embed", None))
+    tb.leaf("layers/tm_lora_b", (nl, 5, LORA_R, d),
+            ("layers", None, None, None), init="zeros")
+    for name in ("wr", "wk", "wv", "wg"):
+        tb.leaf(f"layers/{name}", (nl, d, d), ("layers", "embed", "heads"))
+    tb.leaf("layers/wo", (nl, d, d), ("layers", "heads", "embed"))
+    tb.leaf("layers/w0", (nl, d), ("layers", None), init="zeros")
+    tb.leaf("layers/w_lora_a", (nl, d, LORA_R), ("layers", "embed", None))
+    tb.leaf("layers/w_lora_b", (nl, LORA_R, d), ("layers", None, None),
+            init="zeros")
+    tb.leaf("layers/u", (nl, n_heads, hd), ("layers", "heads", None),
+            init="zeros")
+    tb.leaf("layers/ln_x", (nl, d), ("layers", None), init="ones")
+    # channel-mix
+    tb.leaf("layers/cm_norm", (nl, d), ("layers", None), init="zeros")
+    tb.leaf("layers/cm_mu", (nl, 2, d), ("layers", None, None), init="zeros")
+    tb.leaf("layers/cm_wk", (nl, d, cfg.d_ff), ("layers", "embed", "ff"))
+    tb.leaf("layers/cm_wv", (nl, cfg.d_ff, d), ("layers", "ff", "embed"))
+    tb.leaf("layers/cm_wr", (nl, d, d), ("layers", "embed", "embed"))
+
+    tb.leaf("final_norm", (d,), (None,), init="zeros")
+    tb.leaf("unembed", (d, cfg.padded_vocab), ("embed", "vocab"), scale=0.02)
+    return tb.build()
+
+
+def init(cfg, key):
+    return _build(cfg, key, abstract=False)[0]
+
+
+def abstract(cfg):
+    return _build(cfg, None, abstract=True)[0]
+
+
+def specs(cfg):
+    return _build(cfg, None, abstract=True)[1]
+
+
+# ---------------------------------------------------------------------------
+
+def _shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """Token shift: x[t-1]; position 0 gets ``prev`` (carried state) or 0."""
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _time_mix(cfg: ModelConfig, lp: dict, x: jax.Array,
+              state0: jax.Array | None, prev0: jax.Array | None,
+              chunk: int = 64):
+    """x: (B,S,D). Returns (out, final_state, last_x)."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    dt = x.dtype
+    n_heads = cfg.n_heads
+    hd = d // n_heads
+    xs = _shift(x, prev0)
+    delta = xs - x
+    # ddlerp: 5 interpolation amounts from a shared LoRA
+    lora = jnp.einsum("bsd,dr->bsr", x, lp["tm_lora_a"].astype(dt))
+    lora = jnp.tanh(lora.astype(jnp.float32)).astype(dt)
+    lora = lora.reshape(b, s, 5, LORA_R)
+    amt = lp["tm_mu"].astype(dt)[None, None] + jnp.einsum(
+        "bskr,krd->bskd", lora, lp["tm_lora_b"].astype(dt))
+    mixed = x[:, :, None, :] + delta[:, :, None, :] * amt     # (B,S,5,D)
+    xw, xk, xv, xr, xg = [mixed[:, :, i] for i in range(5)]
+
+    r = jnp.einsum("bsd,dh->bsh", xr, lp["wr"].astype(dt))
+    k = jnp.einsum("bsd,dh->bsh", xk, lp["wk"].astype(dt))
+    v = jnp.einsum("bsd,dh->bsh", xv, lp["wv"].astype(dt))
+    g = jnp.einsum("bsd,dh->bsh", xg, lp["wg"].astype(dt))
+    wl = jnp.einsum("bsd,dr->bsr", xw, lp["w_lora_a"].astype(dt))
+    wl = jnp.einsum("bsr,rd->bsd", jnp.tanh(wl.astype(jnp.float32)),
+                    lp["w_lora_b"].astype(jnp.float32))
+    logw = -jnp.exp(jnp.clip(lp["w0"].astype(jnp.float32)[None, None]
+                             + wl, -10.0, 4.0))
+    w = jnp.exp(logw)                                          # decay in (0,1)
+
+    def heads(z):
+        return jnp.swapaxes(z.reshape(b, s, n_heads, hd), 1, 2)
+
+    out, final_state = L.rwkv6_linear_attention(
+        heads(r), heads(k), heads(v), heads(w.astype(dt)),
+        lp["u"].astype(jnp.float32), state0, chunk=chunk,
+        unroll=cfg.scan_unroll)
+    out = jnp.swapaxes(out, 1, 2).reshape(b, s, d)
+    # per-head group norm
+    og = out.reshape(b, s, n_heads, hd).astype(jnp.float32)
+    og = og * jax.lax.rsqrt(jnp.mean(og * og, axis=-1, keepdims=True) + 1e-6)
+    out = (og.reshape(b, s, d) * lp["ln_x"].astype(jnp.float32)).astype(dt)
+    out = out * jax.nn.silu(g.astype(jnp.float32)).astype(dt)
+    out = jnp.einsum("bsh,hd->bsd", out, lp["wo"].astype(dt))
+    return out, final_state, x[:, -1]
+
+
+def _channel_mix(lp: dict, x: jax.Array, prev0: jax.Array | None):
+    dt = x.dtype
+    xs = _shift(x, prev0)
+    delta = xs - x
+    mu = lp["cm_mu"].astype(dt)
+    xk = x + delta * mu[0][None, None]
+    xr = x + delta * mu[1][None, None]
+    k = jnp.einsum("bsd,df->bsf", xk, lp["cm_wk"].astype(dt))
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(dt)
+    r = jax.nn.sigmoid(jnp.einsum(
+        "bsd,de->bse", xr, lp["cm_wr"].astype(dt)).astype(jnp.float32))
+    out = jnp.einsum("bsf,fd->bsd", k, lp["cm_wv"].astype(dt))
+    return (out.astype(jnp.float32) * r).astype(dt), x[:, -1]
+
+
+def _layer(cfg, lp, x, tm_state=None, tm_prev=None, cm_prev=None,
+           chunk: int = 64):
+    x = L.constrain_batch(x, cfg.batch_axes, cfg.seq_axes)
+    h = L.rms_norm(x, lp["tm_norm"])
+    tm_out, tm_state_new, tm_last = _time_mix(cfg, lp, h, tm_state, tm_prev,
+                                              chunk)
+    x = x + tm_out
+    h2 = L.rms_norm(x, lp["cm_norm"])
+    cm_out, cm_last = _channel_mix(lp, h2, cm_prev)
+    x = x + cm_out
+    return x, (tm_state_new, tm_last, cm_last)
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict,
+            chunk: int = 64):
+    tokens = batch["tokens"]
+    dt = cfg.activation_dtype
+    x = params["embed"]["table"].astype(dt)[tokens]
+
+    def body(carry, lp):
+        y, _ = _layer(cfg, lp, carry, chunk=chunk)
+        return y, ()
+
+    x, _ = jax.lax.scan(L.maybe_remat(body, cfg.remat), x,
+                        params["layers"], unroll=cfg.scan_unroll)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(dt))
+    return logits, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# serving: recurrent state instead of KV cache
+# ---------------------------------------------------------------------------
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    d, nl, nh = cfg.d_model, cfg.n_layers, cfg.n_heads
+    hd = d // nh
+    dt = cfg.activation_dtype
+    return {
+        "tm_state": jax.ShapeDtypeStruct((nl, batch, nh, hd, hd),
+                                         jnp.float32),
+        "tm_prev": jax.ShapeDtypeStruct((nl, batch, d), dt),
+        "cm_prev": jax.ShapeDtypeStruct((nl, batch, d), dt),
+        "len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        abstract_cache(cfg, batch, max_len))
+
+
+def cache_max_len(cfg: ModelConfig, seq_len: int) -> int:
+    return 1      # O(1) state
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            max_len: int, chunk: int = 64):
+    dt = cfg.activation_dtype
+    x = params["embed"]["table"].astype(dt)[tokens]
+
+    def body(carry, lp):
+        y, (st, tmp, cmp) = _layer(cfg, lp, carry, chunk=chunk)
+        return y, (st, tmp, cmp)
+
+    x, (tm_state, tm_prev, cm_prev) = jax.lax.scan(
+        body, x, params["layers"], unroll=cfg.scan_unroll)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["unembed"].astype(dt))
+    cache = {"tm_state": tm_state, "tm_prev": tm_prev, "cm_prev": cm_prev,
+             "len": jnp.asarray(tokens.shape[1], jnp.int32)}
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                token: jax.Array, pos) -> tuple[jax.Array, dict]:
+    dt = cfg.activation_dtype
+    x = params["embed"]["table"].astype(dt)[token][:, None]   # (B,1,D)
+
+    def body(carry, xs):
+        x, = carry
+        lp, st, tmp, cmp = xs
+        y, (st2, tm_last, cm_last) = _layer(
+            cfg, lp, x, tm_state=st, tm_prev=tmp, cm_prev=cmp, chunk=1)
+        return (y,), (st2, tm_last, cm_last)
+
+    (x,), (tm_state, tm_prev, cm_prev) = jax.lax.scan(
+        body, (x,), (params["layers"], cache["tm_state"],
+                     cache["tm_prev"], cache["cm_prev"]),
+        unroll=cfg.scan_unroll)
+    x = L.rms_norm(x[:, 0], params["final_norm"])
+    logits = jnp.einsum("bd,dv->bv", x, params["unembed"].astype(dt))
+    return logits, {"tm_state": tm_state, "tm_prev": tm_prev,
+                    "cm_prev": cm_prev, "len": cache["len"] + 1}

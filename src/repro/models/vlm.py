@@ -1,0 +1,267 @@
+"""Llama-3.2-Vision-style VLM backbone: a dense GQA decoder with
+cross-attention layers interleaved every ``cross_attn_every`` self-attn
+layers.  Per the task spec the vision frontend is a STUB — ``input_specs``
+supplies precomputed patch embeddings (B, n_frontend_tokens, d_model);
+this module consumes them through per-layer cross-attention (gated, as in
+Llama 3.2).
+
+40 layers with cross every 5 => 8 super-blocks of (4 self + 1 cross),
+scanned two-level (outer supers, inner the 4 stacked self layers).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.common import ModelConfig, TreeBuilder
+
+
+def layout(cfg: ModelConfig) -> tuple[int, int]:
+    """(n_supers, self_per_super)."""
+    per = cfg.cross_attn_every
+    assert per > 1 and cfg.n_layers % per == 0
+    return cfg.n_layers // per, per - 1
+
+
+def _self_leaves(tb, prefix, shape_prefix, cfg):
+    d, hd = cfg.d_model, cfg.hd
+    sp = shape_prefix
+    lead = tuple("layers" for _ in sp)
+    tb.leaf(f"{prefix}/attn_norm", (*sp, d), (*lead, None), init="zeros")
+    tb.leaf(f"{prefix}/mlp_norm", (*sp, d), (*lead, None), init="zeros")
+    tb.leaf(f"{prefix}/wq", (*sp, d, cfg.n_heads * hd),
+            (*lead, "embed", "heads"))
+    tb.leaf(f"{prefix}/wk", (*sp, d, cfg.n_kv_heads * hd),
+            (*lead, "embed", "kv"))
+    tb.leaf(f"{prefix}/wv", (*sp, d, cfg.n_kv_heads * hd),
+            (*lead, "embed", "kv"))
+    tb.leaf(f"{prefix}/wo", (*sp, cfg.n_heads * hd, d),
+            (*lead, "heads", "embed"))
+    tb.leaf(f"{prefix}/w_gate", (*sp, d, cfg.d_ff), (*lead, "embed", "ff"))
+    tb.leaf(f"{prefix}/w_up", (*sp, d, cfg.d_ff), (*lead, "embed", "ff"))
+    tb.leaf(f"{prefix}/w_down", (*sp, cfg.d_ff, d), (*lead, "ff", "embed"))
+
+
+def _build(cfg: ModelConfig, key, abstract: bool):
+    tb = TreeBuilder(cfg, key, abstract=abstract)
+    ns, sps = layout(cfg)
+    d, hd = cfg.d_model, cfg.hd
+    tb.leaf("embed/table", (cfg.padded_vocab, d), ("vocab", "table_d"), scale=0.02)
+    _self_leaves(tb, "supers/self", (ns, sps), cfg)
+    # gated cross-attention layers (one per super)
+    tb.leaf("supers/cross/norm", (ns, d), ("layers", None), init="zeros")
+    tb.leaf("supers/cross/wq", (ns, d, cfg.n_heads * hd),
+            ("layers", "embed", "heads"))
+    tb.leaf("supers/cross/wk", (ns, d, cfg.n_kv_heads * hd),
+            ("layers", "embed", "kv"))
+    tb.leaf("supers/cross/wv", (ns, d, cfg.n_kv_heads * hd),
+            ("layers", "embed", "kv"))
+    tb.leaf("supers/cross/wo", (ns, cfg.n_heads * hd, d),
+            ("layers", "heads", "embed"))
+    tb.leaf("supers/cross/gate_attn", (ns,), ("layers",), init="zeros")
+    tb.leaf("supers/cross/gate_mlp", (ns,), ("layers",), init="zeros")
+    tb.leaf("supers/cross/mlp_norm", (ns, d), ("layers", None), init="zeros")
+    tb.leaf("supers/cross/w_gate", (ns, d, cfg.d_ff),
+            ("layers", "embed", "ff"))
+    tb.leaf("supers/cross/w_up", (ns, d, cfg.d_ff), ("layers", "embed", "ff"))
+    tb.leaf("supers/cross/w_down", (ns, cfg.d_ff, d),
+            ("layers", "ff", "embed"))
+    tb.leaf("final_norm", (d,), (None,), init="zeros")
+    tb.leaf("unembed", (d, cfg.padded_vocab), ("embed", "vocab"), scale=0.02)
+    return tb.build()
+
+
+def init(cfg, key):
+    return _build(cfg, key, abstract=False)[0]
+
+
+def abstract(cfg):
+    return _build(cfg, None, abstract=True)[0]
+
+
+def specs(cfg):
+    return _build(cfg, None, abstract=True)[1]
+
+
+# ---------------------------------------------------------------------------
+
+def _cross_block(cfg, lp, x, img_k, img_v):
+    """Gated cross-attn + gated MLP (Llama-3.2 style). img_k/v: (B,T,K,hd)."""
+    x = L.constrain_batch(x, cfg.batch_axes, cfg.seq_axes)
+    dt = x.dtype
+    b, s, d = x.shape
+    hd = cfg.hd
+    h = L.rms_norm(x, lp["norm"])
+    q = jnp.einsum("bsd,dh->bsh", h, lp["wq"].astype(dt)
+                   ).reshape(b, s, cfg.n_heads, hd)
+    o = L.cross_attention(q, img_k, img_v)
+    o = jnp.einsum("bsh,hd->bsd", o.reshape(b, s, cfg.n_heads * hd),
+                   lp["wo"].astype(dt))
+    x = x + jnp.tanh(lp["gate_attn"].astype(jnp.float32)).astype(dt) * o
+    h2 = L.rms_norm(x, lp["mlp_norm"])
+    m = L.mlp_swiglu(lp, h2)
+    x = x + jnp.tanh(lp["gate_mlp"].astype(jnp.float32)).astype(dt) * m
+    return x
+
+
+def _img_kv(cfg, lp, img):
+    """Project frontend embeddings to per-layer cross k/v."""
+    dt = img.dtype
+    b, t, _ = img.shape
+    k = jnp.einsum("btd,dh->bth", img, lp["wk"].astype(dt)
+                   ).reshape(b, t, cfg.n_kv_heads, cfg.hd)
+    v = jnp.einsum("btd,dh->bth", img, lp["wv"].astype(dt)
+                   ).reshape(b, t, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict):
+    """batch: tokens (B,S) + frontend (B, T_img, d_model)."""
+    tokens = batch["tokens"]
+    img = batch["frontend"].astype(cfg.activation_dtype)
+    b, s = tokens.shape
+    dt = cfg.activation_dtype
+    x = params["embed"]["table"].astype(dt)[tokens]
+    cos, sin = L.rope_angles(jnp.arange(s), cfg.hd, cfg.rope_theta)
+
+    def super_body(carry, lp):
+        y = carry
+
+        def self_body(c, slp):
+            z, _ = T._layer(cfg, slp, c, cos, sin)
+            return z, ()
+
+        y, _ = jax.lax.scan(self_body, y, lp["self"],
+                            unroll=cfg.scan_unroll)
+        ik, iv = _img_kv(cfg, lp["cross"], img)
+        y = _cross_block(cfg, lp["cross"], y, ik, iv)
+        return y, ()
+
+    x, _ = jax.lax.scan(L.maybe_remat(super_body, cfg.remat), x,
+                        params["supers"], unroll=cfg.scan_unroll)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(dt))
+    return logits, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def cache_max_len(cfg: ModelConfig, seq_len: int) -> int:
+    return seq_len
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    ns, sps = layout(cfg)
+    dt = cfg.activation_dtype
+    kv = (ns, sps, max_len, batch, cfg.n_kv_heads, cfg.hd)
+    xkv = (ns, batch, cfg.n_frontend_tokens, cfg.n_kv_heads, cfg.hd)
+    return {"k": jax.ShapeDtypeStruct(kv, dt),
+            "v": jax.ShapeDtypeStruct(kv, dt),
+            "xk": jax.ShapeDtypeStruct(xkv, dt),
+            "xv": jax.ShapeDtypeStruct(xkv, dt),
+            "len": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        abstract_cache(cfg, batch, max_len))
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            max_len: int, frontend: jax.Array | None = None):
+    b, s = tokens.shape
+    dt = cfg.activation_dtype
+    img = (frontend if frontend is not None else jnp.zeros(
+        (b, cfg.n_frontend_tokens, cfg.d_model))).astype(dt)
+    x = params["embed"]["table"].astype(dt)[tokens]
+    cos, sin = L.rope_angles(jnp.arange(s), cfg.hd, cfg.rope_theta)
+
+    def super_body(carry, lp):
+        y = carry
+
+        def self_body(c, slp):
+            z, (k, v, _) = T._layer(cfg, slp, c, cos, sin)
+            return z, (jnp.swapaxes(k, 0, 1), jnp.swapaxes(v, 0, 1))
+
+        y, (ks, vs) = jax.lax.scan(self_body, y, lp["self"],
+                                   unroll=cfg.scan_unroll)
+        ik, iv = _img_kv(cfg, lp["cross"], img)
+        y = _cross_block(cfg, lp["cross"], y, ik, iv)
+        return y, (ks, vs, ik, iv)
+
+    x, (kc, vc, xk, xv) = jax.lax.scan(super_body, x, params["supers"],
+                                       unroll=cfg.scan_unroll)
+    pad = max_len - s
+    kc = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    vc = jnp.pad(vc, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    x = L.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["unembed"].astype(dt))
+    cache = {"k": kc, "v": vc, "xk": xk, "xv": xv,
+             "len": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                token: jax.Array, pos) -> tuple[jax.Array, dict]:
+    b = token.shape[0]
+    dt = cfg.activation_dtype
+    hd = cfg.hd
+    slot = cache["len"]
+    x = params["embed"]["table"].astype(dt)[token][:, None]
+    cos, sin = L.rope_angles(jnp.asarray(pos).reshape(1), cfg.hd,
+                             cfg.rope_theta)
+
+    def super_body(carry, xs):
+        x, = carry
+        lp, kc_s, vc_s, xk, xv = xs        # kc_s: (sps, S, B, K, hd)
+
+        def self_body(c, xs2):
+            z, = c
+            slp, kc, vc = xs2
+            h = L.rms_norm(z, slp["attn_norm"])
+            q = jnp.einsum("bsd,dh->bsh", h, slp["wq"].astype(dt)
+                           ).reshape(b, 1, cfg.n_heads, hd)
+            k = jnp.einsum("bsd,dh->bsh", h, slp["wk"].astype(dt)
+                           ).reshape(b, 1, cfg.n_kv_heads, hd)
+            v = jnp.einsum("bsd,dh->bsh", h, slp["wv"].astype(dt)
+                           ).reshape(b, 1, cfg.n_kv_heads, hd)
+            q = L.apply_rope(q, cos[None], sin[None])
+            k = L.apply_rope(k, cos[None], sin[None])
+            kc = jax.lax.dynamic_update_slice(kc, jnp.swapaxes(k, 0, 1),
+                                              (slot, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, jnp.swapaxes(v, 0, 1),
+                                              (slot, 0, 0, 0))
+            o = L.decode_attention(q, jnp.swapaxes(kc, 0, 1),
+                                   jnp.swapaxes(vc, 0, 1), cache["len"] + 1)
+            o = jnp.einsum("bsh,hd->bsd",
+                           o.reshape(b, 1, cfg.n_heads * hd),
+                           slp["wo"].astype(dt))
+            z = z + o
+            h2 = L.rms_norm(z, slp["mlp_norm"])
+            z = z + L.mlp_swiglu(slp, h2)
+            return (z,), (jnp.swapaxes(k, 0, 1)[0], jnp.swapaxes(v, 0, 1)[0])
+
+        (x,), (k_new, v_new) = jax.lax.scan(
+            self_body, (x,), (lp["self"], kc_s, vc_s),
+            unroll=cfg.scan_unroll)
+        x = _cross_block(cfg, lp["cross"], x, xk, xv)
+        return (x,), (k_new, v_new)
+
+    (x,), (k_new, v_new) = jax.lax.scan(
+        super_body, (x,),
+        (params["supers"], cache["k"], cache["v"], cache["xk"], cache["xv"]),
+        unroll=cfg.scan_unroll)
+    new_cache = dict(cache)
+    new_cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], k_new[:, :, None], (0, 0, slot, 0, 0, 0))
+    new_cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], v_new[:, :, None], (0, 0, slot, 0, 0, 0))
+    new_cache["len"] = cache["len"] + 1
+    x = L.rms_norm(x[:, 0], params["final_norm"])
+    logits = jnp.einsum("bd,dv->bv", x, params["unembed"].astype(dt))
+    return logits, new_cache

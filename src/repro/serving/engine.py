@@ -1,0 +1,133 @@
+"""Batched serving engine: static-wave batching over a fixed slot set.
+
+Requests are queued, then served in WAVES of up to ``n_slots``: one
+batched prefill (prompts right-padded to the wave's max prompt length),
+then lock-step decode until every slot hits EOS/max_new_tokens.  Slots
+that finish early idle until the wave completes — the engine reports the
+wasted-slot fraction so the serving benchmarks can quantify it (this is
+the static-batching baseline that paged/continuous batching systems
+improve on; the simplification vs vLLM is deliberate and documented).
+
+Positions are homogeneous within a wave, matching the models' scalar
+cache["len"] semantics; correctness of prefill+decode against the full
+forward pass is covered by tests/test_models_smoke.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import zoo
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new_tokens: int = 32
+    eos_id: int | None = None
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class WaveStats:
+    n_requests: int
+    prompt_len: int
+    decode_steps: int
+    slot_token_capacity: int         # n_slots * decode_steps
+    useful_tokens: int
+    wall_s: float
+
+    @property
+    def slot_utilization(self) -> float:
+        return self.useful_tokens / max(self.slot_token_capacity, 1)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: dict, *, n_slots: int,
+                 max_len: int, pad_id: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.pad_id = pad_id
+        self.queue: deque[Request] = deque()
+        self.finished: list[Request] = []
+        self.stats: list[WaveStats] = []
+        self._decode = jax.jit(
+            lambda p, c, t, pos: zoo.decode_step(cfg, p, c, t, pos))
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    # ------------------------------------------------------------------
+    def _run_wave(self, wave: list[Request]) -> None:
+        t0 = time.perf_counter()
+        plen = max(len(r.prompt) for r in wave)
+        prompts = np.full((self.n_slots, plen), self.pad_id, np.int32)
+        for i, r in enumerate(wave):
+            prompts[i, plen - len(r.prompt):] = r.prompt   # left-pad
+        batch = {"tokens": jnp.asarray(prompts)}
+        if zoo.needs_frontend(self.cfg):
+            batch["frontend"] = jnp.zeros(
+                (self.n_slots, self.cfg.n_frontend_tokens,
+                 self.cfg.d_model), self.cfg.activation_dtype)
+        cache_len = zoo.cache_max_len(
+            self.cfg, min(self.max_len,
+                          plen + max(r.max_new_tokens for r in wave)))
+        logits, cache = zoo.prefill(self.cfg, self.params, batch, cache_len)
+        tokens = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, r in enumerate(wave):
+            r.output.append(int(tokens[i]))
+            if r.eos_id is not None and r.output[-1] == r.eos_id:
+                r.done = True
+
+        steps = 0
+        useful = len(wave)
+        pos = plen
+        max_new = max(r.max_new_tokens for r in wave)
+        while steps < max_new - 1 and not all(
+                r.done or len(r.output) >= r.max_new_tokens for r in wave):
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(tokens),
+                                         jnp.asarray(pos))
+            tokens = np.asarray(jnp.argmax(logits, axis=-1))
+            for i, r in enumerate(wave):
+                if r.done or len(r.output) >= r.max_new_tokens:
+                    continue
+                r.output.append(int(tokens[i]))
+                useful += 1
+                if r.eos_id is not None and r.output[-1] == r.eos_id:
+                    r.done = True
+            steps += 1
+            pos += 1
+
+        for r in wave:
+            r.done = True
+            self.finished.append(r)
+        self.stats.append(WaveStats(
+            n_requests=len(wave), prompt_len=plen, decode_steps=steps + 1,
+            slot_token_capacity=self.n_slots * (steps + 1),
+            useful_tokens=useful, wall_s=time.perf_counter() - t0))
+
+    # ------------------------------------------------------------------
+    def run(self) -> list[Request]:
+        while self.queue:
+            wave = [self.queue.popleft()
+                    for _ in range(min(self.n_slots, len(self.queue)))]
+            self._run_wave(wave)
+        return self.finished
+
+    @property
+    def mean_slot_utilization(self) -> float:
+        if not self.stats:
+            return 0.0
+        return sum(w.slot_utilization for w in self.stats) / len(self.stats)

@@ -1,0 +1,104 @@
+"""KV-cache sharding policy.
+
+Cache layout is (L, S, B, K, hd) (transformer.py).  The policy mirrors
+the paper's per-op concurrency idea applied to decode (DESIGN.md §6):
+
+* batch always shards over the data axis;
+* if kv-head count divides the model-axis degree budget, shard heads
+  (classic TP decode);
+* otherwise shard the SEQUENCE dim over the model axis — partial-softmax
+  decode (flash-decoding): GSPMD turns the softmax reductions over the
+  sharded S dim into local reductions + small all-reduces of the
+  (max, sum, weighted-v) statistics.
+"""
+
+from __future__ import annotations
+
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig, ShardingPlan
+
+# cache keys holding (…, S, B, K, hd) attention caches
+_KV_KEYS = ("k", "v", "xk", "xv")
+
+
+def kv_cache_pspec(cfg: ModelConfig, plan: ShardingPlan, *,
+                   model_degree: int, lead_dims: int = 1
+                   ) -> tuple[P, str]:
+    """PartitionSpec for a (*lead, S, B, K, hd) cache + strategy name."""
+    batch = tuple(plan.batch_axes) or None
+    if isinstance(batch, tuple) and len(batch) == 1:
+        batch = batch[0]
+    model_axes = plan.rules.get("kv", ())
+    ma = (model_axes if len(model_axes) > 1
+          else (model_axes[0] if model_axes else None))
+    lead = [None] * lead_dims
+    if ma is None or model_degree <= 1:
+        return P(*lead, None, batch, None, None), "replicated-heads"
+    if cfg.n_kv_heads % model_degree == 0:
+        return P(*lead, None, batch, ma, None), "head-sharded"
+    return (P(*lead, ma, batch, None, None),
+            "sequence-sharded(flash-decode)")
+
+
+def cache_shardings(cfg: ModelConfig, plan: ShardingPlan, mesh: Mesh,
+                    cache_tree, *, model_degree: int):
+    """NamedSharding tree for a cache pytree.
+
+    Keys in _KV_KEYS get the kv policy (lead dims inferred from rank);
+    recurrent / shift / conv states shard batch on their batch dim;
+    scalars replicate.  Any spec whose sharded dim does not divide evenly
+    (e.g. whisper's 1500-frame cross-kv at degree 16) falls back to a
+    batch-only spec for that leaf."""
+    batch = tuple(plan.batch_axes) or None
+    if isinstance(batch, tuple) and len(batch) == 1:
+        batch = batch[0]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    strategy = kv_cache_pspec(cfg, plan, model_degree=model_degree)[1]
+
+    def axis_size(part) -> int:
+        if part is None:
+            return 1
+        if isinstance(part, tuple):
+            n = 1
+            for a in part:
+                n *= sizes.get(a, 1)
+            return n
+        return sizes.get(part, 1)
+
+    def divides(spec: P, shape) -> bool:
+        for dim, part in zip(shape, tuple(spec)):
+            n = axis_size(part)
+            if n > 1 and dim % n:
+                return False
+        return True
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for key, val in node.items():
+            if isinstance(val, dict):
+                out[key] = walk(val)
+                continue
+            rank = len(val.shape)
+            if key in _KV_KEYS and rank >= 5:
+                spec = kv_cache_pspec(cfg, plan, model_degree=model_degree,
+                                      lead_dims=rank - 4)[0]
+                if not divides(spec, val.shape):
+                    # batch-only fallback (batch dim is rank-3 from the end)
+                    parts = [None] * rank
+                    parts[rank - 3] = batch
+                    spec = P(*parts)
+            elif rank >= 2:
+                # (L, B, ...) recurrent/shift/conv states: batch on dim 1
+                spec = P(None, batch, *([None] * (rank - 2)))
+                if not divides(spec, val.shape):
+                    spec = P()
+            else:
+                spec = P()
+            out[key] = NamedSharding(mesh, spec)
+        return out
+
+    return walk(cache_tree), strategy

@@ -1,0 +1,11 @@
+from repro.train.trainer import (TrainConfig, init_state, abstract_state,
+                                 state_specs, make_train_step,
+                                 make_eval_step, make_prefill_step,
+                                 make_serve_step)
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault import (Heartbeat, StragglerMonitor, run_with_recovery,
+                               RecoveryStats)
+__all__ = ["TrainConfig", "init_state", "abstract_state", "state_specs",
+           "make_train_step", "make_eval_step", "make_prefill_step",
+           "make_serve_step", "CheckpointManager", "Heartbeat",
+           "StragglerMonitor", "run_with_recovery", "RecoveryStats"]

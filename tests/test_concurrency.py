@@ -1,0 +1,77 @@
+"""Strategies 1-2 (concurrency control) + interference recorder."""
+
+from repro.core import (ConcurrencyController, ConcurrencyRuntime,
+                        InterferenceRecorder, SimMachine,
+                        build_paper_graph)
+
+
+class TestStrategies12:
+    def setup_method(self):
+        self.machine = SimMachine()
+        self.graph = build_paper_graph("inception_v3")
+        self.rt = ConcurrencyRuntime()
+        self.rt.profile(self.graph)
+
+    def test_one_plan_per_class(self):
+        plan = self.rt.plan
+        for cls in self.graph.classes():
+            assert cls in plan.per_class
+
+    def test_class_plan_from_largest_instance(self):
+        """Strategy 2: class threads = optimum of the heaviest instance."""
+        plan = self.rt.plan
+        classes = self.graph.classes()
+        for cls, ops in classes.items():
+            if not all(o.tunable for o in ops):
+                continue
+            heaviest = max(ops, key=lambda o: o.weight)
+            curve = self.rt.store.curves[heaviest.size_key]
+            t, v, _ = curve.best()
+            assert plan.per_class[cls].threads == t
+
+    def test_clamp_reverts_large_deviations(self):
+        plan = self.rt.plan
+        cls = "Conv2DBackpropFilter"
+        base = plan.per_class[cls]
+        from repro.core import OpPlan
+        ops = self.graph.classes()[cls]
+        wild = OpPlan(max(1, base.threads - 10 * plan.case_step),
+                      base.variant, 1.0)
+        clamped = plan.clamp(ops[0], wild)
+        assert clamped.threads == base.threads
+        mild = OpPlan(base.threads - plan.case_step, base.variant, 1.0)
+        assert plan.clamp(ops[0], mild).threads == mild.threads
+
+    def test_non_tunable_pinned_to_default(self):
+        """Eigen-style ops keep the session default concurrency."""
+        plan = self.rt.plan
+        for cls, ops in self.graph.classes().items():
+            if all(not o.tunable for o in ops):
+                assert plan.per_class[cls].threads == \
+                    self.machine.spec.cores
+
+    def test_candidates_sorted_and_bounded(self):
+        ctrl: ConcurrencyController = self.rt.controller
+        for op in list(self.graph.ops.values())[:10]:
+            cands = ctrl.candidates_for(op, k=3)
+            assert 1 <= len(cands) <= 3
+            times = [c.predicted_time for c in cands]
+            assert times == sorted(times)
+
+
+class TestInterference:
+    def test_blacklist_after_repeated_slowdown(self):
+        rec = InterferenceRecorder(threshold=1.3)
+        for _ in range(5):
+            rec.record("A", "B", predicted=1.0, observed=1.6)
+        assert rec.blacklisted("A", "B")
+        assert rec.blacklisted("B", "A")          # symmetric
+        assert not rec.blacklisted("A", "C")
+        assert not rec.compatible("A", ["B"])
+        assert rec.compatible("A", ["C"])
+
+    def test_fast_corun_not_blacklisted(self):
+        rec = InterferenceRecorder(threshold=1.3)
+        for _ in range(5):
+            rec.record("A", "B", predicted=1.0, observed=1.05)
+        assert not rec.blacklisted("A", "B")

@@ -1,0 +1,118 @@
+"""Hill-climbing performance model (paper §III-C) + regression baseline."""
+
+import numpy as np
+import pytest
+
+from repro.core import (HillClimbProfiler, Op, ProfileStore, SimMachine,
+                        Placement, paper_case_lists, power_of_two_cases,
+                        build_paper_graph)
+
+
+def _op(shape=(32, 8, 8, 384), cls="Conv2DBackpropFilter", f=0.95,
+        flops_per=740.0, bytes_per=260.0):
+    elems = float(np.prod(shape))
+    return Op(uid=0, name="t", op_class=cls, input_shape=shape,
+              flops=elems * flops_per, bytes_moved=elems * bytes_per,
+              working_set=elems * bytes_per, parallel_fraction=f)
+
+
+@pytest.fixture
+def machine():
+    return SimMachine()
+
+
+def _measure(machine):
+    def fn(op, threads, variant):
+        return machine.op_time(op, Placement(threads, cache_sharing=variant))
+    return fn
+
+
+class TestHillClimb:
+    def test_finds_interior_optimum(self, machine):
+        op = _op()
+        prof = HillClimbProfiler(_measure(machine), paper_case_lists(),
+                                 interval=2)
+        curve = prof.profile(op)
+        t, v, y = curve.measured_best()
+        t_true, pl_true = machine.best_time_exhaustive(op)
+        # within 5% of the exhaustive optimum (paper: <2% for x=4)
+        assert y <= t_true * 1.05
+
+    def test_probe_budget_bounded(self, machine):
+        """N <= C/x * 2 (paper §III-C)."""
+        op = _op()
+        for x in (2, 4, 8):
+            prof = HillClimbProfiler(_measure(machine), paper_case_lists(),
+                                     interval=x)
+            curve = prof.profile(op)
+            assert curve.probes <= (68 // x) * 2 + 4
+
+    def test_stops_on_first_increase(self, machine):
+        calls = []
+
+        def spy(op, threads, variant):
+            t = _measure(machine)(op, threads, variant)
+            calls.append((variant, threads))
+            return t
+
+        prof = HillClimbProfiler(spy, paper_case_lists(), interval=4)
+        prof.profile(_op())
+        # within each variant, threads must be non-decreasing (no backtrack)
+        for variant in (False, True):
+            seq = [t for v, t in calls if v == variant]
+            assert seq == sorted(seq)
+
+    def test_interpolation_accuracy_vs_interval(self, machine):
+        """Paper Table V: accuracy degrades as the interval grows, high
+        (>=90%) at x in {2, 4}."""
+        graph = build_paper_graph("inception_v3")
+        oracle = _measure(machine)
+        accs = {}
+        for x in (2, 4, 8, 16):
+            prof = HillClimbProfiler(oracle, paper_case_lists(), interval=x)
+            store = prof.profile_graph(graph)
+            vals = [store.prediction_accuracy(op, oracle)
+                    for op in graph.ops.values()]
+            accs[x] = float(np.mean(vals))
+        assert accs[2] >= 0.90
+        assert accs[4] >= 0.85
+        assert accs[2] >= accs[8] >= accs[16]
+        assert accs[4] >= accs[16]
+
+    def test_power_of_two_cases(self):
+        cases = power_of_two_cases(16)
+        assert cases[False] == [1, 2, 4, 8, 16]
+
+    def test_curve_predict_exact_at_samples(self, machine):
+        op = _op()
+        prof = HillClimbProfiler(_measure(machine), paper_case_lists(),
+                                 interval=4)
+        curve = prof.profile(op)
+        for v, pts in curve.samples.items():
+            for t, y in pts:
+                assert curve.predict(t, v) == pytest.approx(y, rel=1e-9)
+
+
+class TestRegressionBaseline:
+    def test_regressions_run_and_underperform_hillclimb(self, machine):
+        """Paper Table IV vs V: regression accuracy is well below the
+        hill-climb model's."""
+        from repro.core import RegressionSuite
+
+        train_graph = build_paper_graph("resnet50")
+        test_graph = build_paper_graph("alexnet")
+        oracle = _measure(machine)
+        suite = RegressionSuite(
+            feature_fn=machine.counters, oracle=oracle,
+            cases=[1, 9, 17, 25, 33])
+        train_ops = [op for op in train_graph.ops.values()][:24]
+        test_ops = [op for op in test_graph.ops.values()][:12]
+        res = suite.evaluate(train_ops, test_ops, n_samples=4,
+                             regressor="KNeighbors")
+        assert "accuracy" in res and "r2" in res
+
+        prof = HillClimbProfiler(oracle, paper_case_lists(), interval=4)
+        store = prof.profile_graph(test_graph)
+        hc_acc = float(np.mean([store.prediction_accuracy(op, oracle)
+                                for op in test_graph.ops.values()]))
+        assert hc_acc > res["accuracy"]

@@ -1,0 +1,171 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CurveModel, HillClimbProfiler, Op, Placement,
+                        SimMachine, paper_case_lists)
+from repro.hw.hlo import parse_collectives, shape_bytes
+from repro.optim import CompressionConfig, compress, init_error_state
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# perf model invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(flops=st.floats(1e6, 1e11), byts=st.floats(1e4, 1e9),
+       f=st.floats(0.5, 0.99), seed=st.integers(0, 100))
+def test_hillclimb_best_never_worse_than_probes(flops, byts, f, seed):
+    machine = SimMachine(seed=seed)
+    op = Op(uid=0, name="t", op_class="X", input_shape=(32, 8, 8, 64),
+            flops=flops, bytes_moved=byts, working_set=byts,
+            parallel_fraction=f)
+
+    def measure(op_, t, v):
+        return machine.op_time(op_, Placement(t, cache_sharing=v))
+
+    curve = HillClimbProfiler(measure, paper_case_lists(),
+                              interval=4).profile(op)
+    t, v, y = curve.measured_best()
+    for variant, pts in curve.samples.items():
+        for tt, yy in pts:
+            assert y <= yy + 1e-15
+
+
+@settings(**SETTINGS)
+@given(f=st.floats(0.5, 0.99), seed=st.integers(0, 50))
+def test_interpolation_between_sample_bounds(f, seed):
+    """Predictions between two samples lie between those samples
+    (piecewise-linear)."""
+    machine = SimMachine(seed=seed, jitter=0.0)
+    op = Op(uid=0, name="t", op_class="X", input_shape=(16, 16, 16, 64),
+            flops=2e9, bytes_moved=1e7, working_set=1e7,
+            parallel_fraction=f)
+
+    def measure(op_, t, v):
+        return machine.op_time(op_, Placement(t, cache_sharing=v))
+
+    curve = HillClimbProfiler(measure, paper_case_lists(),
+                              interval=4).profile(op)
+    for v, pts in curve.samples.items():
+        for (t1, y1), (t2, y2) in zip(pts, pts[1:]):
+            mid = (t1 + t2) // 2
+            pred = curve.predict(mid, v)
+            lo, hi = min(y1, y2), max(y1, y2)
+            assert lo - 1e-12 <= pred <= hi + 1e-12
+
+
+@settings(**SETTINGS)
+@given(threads=st.integers(1, 68), f=st.floats(0.5, 0.99))
+def test_machine_time_positive_monotone_work(threads, f):
+    machine = SimMachine(jitter=0.0)
+    small = Op(uid=0, name="a", op_class="X", input_shape=(8, 8, 8, 8),
+               flops=1e8, bytes_moved=1e6, working_set=1e6,
+               parallel_fraction=f)
+    big = Op(uid=1, name="b", op_class="X", input_shape=(8, 8, 8, 8),
+             flops=2e8, bytes_moved=2e6, working_set=2e6,
+             parallel_fraction=f)
+    pl = Placement(threads)
+    assert machine.op_time(small, pl) > 0
+    assert machine.op_time(big, pl) > machine.op_time(small, pl)
+
+
+# ---------------------------------------------------------------------------
+# compression invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 1000), ratio=st.floats(0.01, 0.9),
+       scheme=st.sampled_from(["topk", "int8"]))
+def test_error_feedback_conserves_signal(seed, ratio, scheme):
+    cfg = CompressionConfig(scheme=scheme, topk_ratio=ratio)
+    g = {"w": jax.random.normal(jax.random.PRNGKey(seed), (128,))}
+    err = init_error_state(g)
+    wire, new_err, _ = compress(cfg, g, err)
+    lhs = wire["w"].astype(jnp.float32) + new_err["w"]
+    rhs = g["w"].astype(jnp.float32) + err["w"]
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), top_k=st.sampled_from([1, 2]))
+def test_moe_dispatch_capacity_respected(seed, top_k):
+    from repro.models.layers import moe_block
+    key = jax.random.PRNGKey(seed)
+    e, d, fdim = 4, 16, 32
+    p = {
+        "router": jax.random.normal(key, (d, e)) * 0.1,
+        "w_gate": jax.random.normal(key, (e, d, fdim)) * 0.1,
+        "w_up": jax.random.normal(key, (e, d, fdim)) * 0.1,
+        "w_down": jax.random.normal(key, (e, fdim, d)) * 0.1,
+    }
+    x = jax.random.normal(key, (2, 8, d))
+    out, aux = moe_block(p, x, n_experts=e, top_k=top_k,
+                         capacity_factor=1.0)
+    assert out.shape == x.shape
+    assert bool(jnp.isfinite(out).all())
+    assert float(aux) >= 0.99   # aux >= 1 at balance (E * sum f*p >= 1)
+
+
+# ---------------------------------------------------------------------------
+# HLO parsing invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(dims=st.lists(st.integers(1, 64), min_size=1, max_size=4))
+def test_shape_bytes(dims):
+    s = f"f32[{','.join(map(str, dims))}]"
+    assert shape_bytes(s) == int(np.prod(dims)) * 4
+
+
+def test_parse_collectives_ring_formulas():
+    hlo = """
+  %ag = f32[16,128]{1,0} all-gather(%x), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar = f32[16,128]{1,0} all-reduce(%y), replica_groups={{0,1},{2,3}}, to_apply=%sum
+  %rs = f32[4,128]{1,0} reduce-scatter(%z), replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = f32[8,128]{1,0} collective-permute(%w), source_target_pairs={{0,1},{1,0}}
+"""
+    stats = parse_collectives(hlo, pod_size=2)
+    by = stats.by_kind()
+    full_ag = 16 * 128 * 4
+    assert by["all-gather"][1] == full_ag * 3 / 4
+    full_ar = 16 * 128 * 4
+    assert by["all-reduce"][1] == 2 * full_ar * 1 / 2
+    full_rs = 4 * 128 * 4 * 4
+    assert by["reduce-scatter"][1] == full_rs * 3 / 4
+    assert by["collective-permute"][1] == 8 * 128 * 4
+    # groups {0,1,2,3} cross pod boundary at pod_size=2
+    assert stats.dci_link_bytes > 0
+    assert stats.ici_link_bytes > 0    # {0,1} stays in pod
+
+
+def test_parse_collectives_iota_groups():
+    hlo = ("  %ar = bf16[256]{0} all-reduce(%x), "
+           "replica_groups=[2,2]<=[4], to_apply=%s\n")
+    stats = parse_collectives(hlo, pod_size=4)
+    assert stats.ops[0].group_size == 2
+    assert not stats.ops[0].crosses_pod
+
+
+# ---------------------------------------------------------------------------
+# data determinism
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), step=st.integers(0, 50))
+def test_data_step_determinism(seed, step):
+    from repro.data import DataConfig, SyntheticLM
+    cfg = DataConfig(seq_len=16, global_batch=4, vocab=53, seed=seed)
+    a = SyntheticLM(cfg).batch_at(step)
+    b = SyntheticLM(cfg).batch_at(step)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].min() >= 0 and a["tokens"].max() < 53

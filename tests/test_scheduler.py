@@ -1,0 +1,113 @@
+"""Co-run scheduler (paper Strategies 3-4) + baselines."""
+
+import pytest
+
+from repro.core import (ConcurrencyRuntime, RuntimeConfig, SimMachine,
+                        build_paper_graph, manual_best_schedule,
+                        uniform_schedule)
+
+
+@pytest.fixture(scope="module")
+def machine():
+    return SimMachine()
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return build_paper_graph("resnet50")
+
+
+def _run(graph, **cfg):
+    rt = ConcurrencyRuntime(config=RuntimeConfig(**cfg))
+    rt.profile(graph)
+    return rt.execute_step(graph)
+
+
+class TestCorunScheduler:
+    def test_all_ops_execute_exactly_once(self, graph):
+        res = _run(graph)
+        assert len(res.records) == graph.n_ops
+        assert len({r.op.uid for r in res.records}) == graph.n_ops
+
+    def test_dependencies_respected(self, graph):
+        res = _run(graph)
+        start = {r.op.uid: r.start for r in res.records}
+        finish = {r.op.uid: r.finish for r in res.records}
+        for op in graph.ops.values():
+            for d in op.deps:
+                assert finish[d] <= start[op.uid] + 1e-12
+
+    def test_core_capacity_never_exceeded(self, graph, machine):
+        res = _run(graph)
+        events = sorted({r.start for r in res.records}
+                        | {r.finish for r in res.records})
+        for t in events:
+            used = sum(r.threads for r in res.records
+                       if not r.hyper and r.start <= t < r.finish)
+            assert used <= machine.spec.cores
+
+    def test_s3_beats_serial(self, graph):
+        serial = _run(graph, enable_s3=False, enable_s4=False)
+        corun = _run(graph, enable_s3=True, enable_s4=False)
+        assert corun.makespan < serial.makespan
+        assert corun.mean_corunning > serial.mean_corunning
+
+    def test_deterministic(self, graph):
+        a = _run(graph)
+        b = _run(graph)
+        assert a.makespan == b.makespan
+        assert [r.op.uid for r in a.records] == [r.op.uid for r in b.records]
+
+    def test_events_timeline_nonempty(self, graph):
+        res = _run(graph)
+        assert len(res.events) >= 2 * graph.n_ops  # launch + finish each
+
+
+class TestBaselines:
+    def test_oversubscription_penalty(self, graph, machine):
+        """Paper Table I: inter*intra beyond physical cores hurts."""
+        good = uniform_schedule(graph, machine, intra=34, inter=2)
+        oversub = uniform_schedule(graph, machine, intra=136, inter=2)
+        assert oversub.makespan > good.makespan
+
+    def test_inter_op_helps(self, graph, machine):
+        """Paper Table I: (2,34) beats (1,68) on these networks."""
+        rec = uniform_schedule(graph, machine, intra=68, inter=1)
+        two = uniform_schedule(graph, machine, intra=34, inter=2)
+        assert two.makespan < rec.makespan
+
+    def test_manual_grid(self, graph, machine):
+        best, cfg = manual_best_schedule(graph, machine)
+        assert cfg[0] in (1, 2, 4) and cfg[1] in (17, 34, 68)
+
+
+class TestEndToEnd:
+    @pytest.mark.parametrize("model,band", [
+        ("resnet50", (1.2, 2.0)),
+        ("dcgan", (1.2, 2.0)),
+        ("inception_v3", (1.0, 1.6)),
+    ])
+    def test_speedup_vs_recommendation(self, machine, model, band):
+        """Paper Fig 3.d: 17%-49% improvement over the TF recommendation
+        (bands widened for the simulated machine; see EXPERIMENTS.md)."""
+        g = build_paper_graph(model)
+        rt = ConcurrencyRuntime()
+        s = rt.train(g, total_steps=1000)
+        assert band[0] <= s.speedup <= band[1]
+
+    def test_close_to_manual(self, machine):
+        """Paper: runtime is within a few % of (or better than) exhaustive
+        manual tuning."""
+        g = build_paper_graph("dcgan")
+        rt = ConcurrencyRuntime()
+        rt.profile(g)
+        ours = rt.execute_step(g).makespan
+        manual, _ = manual_best_schedule(g, machine)
+        assert ours <= manual.makespan * 1.15
+
+    def test_profiling_overhead_small(self, machine):
+        """Paper §IV-A: profiling steps are <0.05% of total training."""
+        g = build_paper_graph("resnet50")
+        rt = ConcurrencyRuntime()
+        s = rt.train(g, total_steps=10000)
+        assert s.profiling_overhead < 0.05

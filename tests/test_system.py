@@ -1,0 +1,58 @@
+"""End-to-end behaviour tests for the paper's system: the headline claims
+(EXPERIMENTS.md cross-references these numbers)."""
+
+from repro.core import (ConcurrencyRuntime, RuntimeConfig, SimMachine,
+                        build_paper_graph, uniform_schedule)
+
+
+def test_headline_mean_speedup():
+    """Paper abstract: 33% average (up to 49%) improvement over the
+    TensorFlow-recommended configuration across the three models.
+    Our simulated-machine reproduction lands in the same band."""
+    machine = SimMachine()
+    speedups = []
+    for model in ("resnet50", "dcgan", "inception_v3"):
+        g = build_paper_graph(model)
+        base = uniform_schedule(g, machine, intra=68, inter=1).makespan
+        rt = ConcurrencyRuntime()
+        rt.profile(g)
+        ours = rt.execute_step(g).makespan
+        speedups.append(base / ours)
+    mean_gain = sum(speedups) / len(speedups) - 1.0
+    assert 0.15 <= mean_gain <= 0.60, speedups       # paper: 0.33
+    assert max(speedups) - 1.0 >= 0.30, speedups     # paper max: 0.49
+
+
+def test_strategy_ordering_matches_paper():
+    """Fig 3: S3 (co-running) is the dominant contribution for ResNet-50;
+    each strategy is non-harmful."""
+    machine = SimMachine()
+    g = build_paper_graph("resnet50")
+
+    def run(s3, s4):
+        rt = ConcurrencyRuntime(config=RuntimeConfig(enable_s3=s3,
+                                                     enable_s4=s4))
+        rt.profile(g)
+        return rt.execute_step(g).makespan
+
+    base = uniform_schedule(g, machine, intra=68, inter=1).makespan
+    s12, s123, s1234 = run(False, False), run(True, False), run(True, True)
+    gain_s12 = base / s12
+    gain_s3 = s12 / s123
+    gain_s4 = s123 / s1234
+    assert gain_s12 > 1.0
+    assert gain_s3 > gain_s12 - 1.0 + 1.0 or gain_s3 > 1.15   # S3 dominates
+    assert gain_s4 >= 0.999                                    # non-harmful
+
+
+def test_dynamic_corun_exceeds_static_interop():
+    """Fig 4: the runtime's co-run level varies dynamically and its peak
+    exceeds the static inter-op parallelism (1) of the recommendation."""
+    g = build_paper_graph("inception_v3")
+    rt = ConcurrencyRuntime()
+    rt.profile(g)
+    res = rt.execute_step(g)
+    peak = max(n for _, n in res.events)
+    assert peak >= 2
+    counts = {n for _, n in res.events}
+    assert len(counts) >= 3        # genuinely dynamic, not a fixed level
