@@ -1,0 +1,133 @@
+"""Multi-tenant pool benchmarks (one function per headline claim).
+
+Row convention matches benchmarks/run.py: ``name,us_per_call,derived``.
+
+Claims measured:
+
+* ``pool_vs_serial`` — aggregate throughput of the co-scheduling pool is
+  strictly higher than running the same job mix one graph at a time.
+* ``pool_fairness_latency`` — per-job latency and the Jain fairness index
+  of the weighted-fair-share policy under mixed priorities.
+* ``plancache_amortization`` — the shared PlanCache cuts total profiling
+  probes across tenants versus isolated per-job profiling.
+* ``serving_corun_training`` — a high-priority serving wave co-scheduled
+  with a training step finishes far sooner than queued behind it
+  (latency, not makespan, is the claim: co-running a tiny wave next to a
+  big step pays a little bandwidth contention but stops head-of-line
+  blocking).  The serial baseline is priority-blind FIFO by design (see
+  ``RuntimePool.run_serial``) — priority queueing is itself a pool
+  feature, so this number credits co-scheduling + priority together.
+"""
+
+from __future__ import annotations
+
+from repro.core import SimMachine, build_paper_graph
+from repro.multitenant import PoolConfig, RuntimePool
+
+MACHINE = SimMachine()
+
+MIX = [("resnet50", 1.0), ("dcgan", 1.0), ("resnet50", 2.0), ("dcgan", 1.0)]
+
+_MIX_RESULTS = None
+
+
+def _mix_results():
+    """One shared (pool result, serial result) pair — the mix run is
+    deterministic, and three bench functions report different slices of
+    the same run."""
+    global _MIX_RESULTS
+    if _MIX_RESULTS is None:
+        pool = RuntimePool(machine=MACHINE,
+                           config=PoolConfig(max_active=3))
+        for i, (model, prio) in enumerate(MIX):
+            pool.submit(build_paper_graph(model), priority=prio,
+                        name=f"{model}-{i}")
+        _MIX_RESULTS = (pool.run(), pool.run_serial())
+    return _MIX_RESULTS
+
+
+def pool_vs_serial() -> list[str]:
+    res, serial = _mix_results()
+    rows = [
+        f"mt/pool_makespan,{res.makespan*1e6:.1f},"
+        f"thpt={res.aggregate_throughput:.1f}ops/s",
+        f"mt/serial_makespan,{serial.makespan*1e6:.1f},"
+        f"thpt={serial.aggregate_throughput:.1f}ops/s",
+        f"mt/aggregate_speedup,{res.makespan*1e6:.1f},"
+        f"speedup={serial.makespan/res.makespan:.3f}x",
+    ]
+    assert res.aggregate_throughput > serial.aggregate_throughput, \
+        "pool must beat serial aggregate throughput"
+    return rows
+
+
+def pool_fairness_latency() -> list[str]:
+    res, serial = _mix_results()
+    # service-based Jain reflects the mix's demand skew; slowdown-based
+    # Jain (latency vs running alone) reflects what the scheduler did
+    rows = [
+        f"mt/fairness,0,jain={res.fairness:.3f}",
+        f"mt/slowdown_fairness,0,"
+        f"jain={res.slowdown_fairness(serial.job_makespans):.3f}",
+    ]
+    for j in res.jobs:
+        rows.append(
+            f"mt/latency/{j.name},{j.latency*1e6:.1f},"
+            f"serial={serial.job_latencies[j.jid]*1e6:.1f}us")
+    return rows
+
+
+def plancache_amortization() -> list[str]:
+    res, serial = _mix_results()      # serial = per-job isolated profiling
+    spent = res.cache_stats["probes_spent"]
+    saved = res.cache_stats["probes_saved"]
+    rows = [
+        f"mt/plancache_probes,{spent:.0f},"
+        f"isolated={serial.profiling_probes}",
+        f"mt/plancache_saved,{saved:.0f},"
+        f"hit_rate={res.cache_stats['hit_rate']:.2f}",
+    ]
+    assert spent < serial.profiling_probes, \
+        "shared PlanCache must reduce total profiling probes"
+    return rows
+
+
+def serving_corun_training() -> list[str]:
+    """A serving tenant (wave graph) next to a training tenant."""
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.serving import Request, wave_op_graph
+
+    cfg = get_config("olmo-1b", smoke=True)
+    rng = np.random.default_rng(0)
+    wave = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, size=12).astype(
+                        np.int32),
+                    max_new_tokens=16) for i in range(4)]
+    pool = RuntimePool(machine=MACHINE, config=PoolConfig(max_active=2))
+    pool.submit(build_paper_graph("resnet50"), name="train-step")
+    pool.submit(wave_op_graph(cfg, wave), priority=2.0,
+                name="serve-wave")
+    res = pool.run()
+    serial = pool.run_serial()
+    serve = next(j for j in res.jobs if j.name == "serve-wave")
+    rows = [
+        f"mt/serve+train_pool,{res.makespan*1e6:.1f},"
+        f"speedup={serial.makespan/res.makespan:.3f}x",
+        f"mt/serve_wave_latency,{serve.latency*1e6:.1f},"
+        f"serial={serial.job_latencies[serve.jid]*1e6:.1f}us",
+    ]
+    assert serve.latency < serial.job_latencies[serve.jid], \
+        "co-scheduled wave must beat its serial queue position"
+    return rows
+
+
+ALL = [pool_vs_serial, pool_fairness_latency, plancache_amortization,
+       serving_corun_training]
+
+
+if __name__ == "__main__":
+    for fn in ALL:
+        for row in fn():
+            print(row)

@@ -4,8 +4,10 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import kernel_bench, paper_tables, roofline
-    fns = list(paper_tables.ALL) + list(kernel_bench.ALL) + list(roofline.ALL)
+    from benchmarks import kernel_bench, multitenant_bench, paper_tables, \
+        roofline
+    fns = (list(paper_tables.ALL) + list(kernel_bench.ALL)
+           + list(roofline.ALL) + list(multitenant_bench.ALL))
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     for fn in fns:

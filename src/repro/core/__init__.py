@@ -16,7 +16,7 @@ TPU adaptation (DESIGN.md S2):
 from repro.core.graph import Op, OpGraph, GraphBuilder, build_paper_graph, \
     build_transformer_step_graph, PAPER_INPUT_SIZES
 from repro.core.perfmodel import (
-    CurveModel, HillClimbProfiler, ProfileStore, RegressionSuite,
+    CurveCache, CurveModel, HillClimbProfiler, ProfileStore, RegressionSuite,
     paper_case_lists, power_of_two_cases, REGRESSORS)
 from repro.core.concurrency import ConcurrencyController, ConcurrencyPlan, OpPlan
 from repro.core.scheduler import (
@@ -33,10 +33,12 @@ from repro.core.autotune import (
 __all__ = [
     "Op", "OpGraph", "GraphBuilder", "build_paper_graph",
     "build_transformer_step_graph", "PAPER_INPUT_SIZES",
-    "CurveModel", "HillClimbProfiler", "ProfileStore", "RegressionSuite",
+    "CurveCache", "CurveModel", "HillClimbProfiler", "ProfileStore",
+    "RegressionSuite",
     "paper_case_lists", "power_of_two_cases", "REGRESSORS",
     "ConcurrencyController", "ConcurrencyPlan", "OpPlan",
-    "CorunScheduler", "ScheduleResult", "ScheduledOp", "uniform_schedule",
+    "CorunScheduler", "ScheduleResult", "ScheduledOp",
+    "uniform_schedule",
     "manual_best_schedule", "InterferenceRecorder",
     "SimMachine", "Placement",
     "ConcurrencyRuntime", "RuntimeConfig", "TrainingSummary",

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Hashable, Sequence
+from typing import Callable, Hashable, Protocol, Sequence
 
 import numpy as np
 
@@ -32,6 +32,30 @@ from repro.core.graph import Op, OpGraph
 # measure(op, threads, variant) -> seconds.  ``variant`` is the affinity
 # flavor (paper: cache-sharing True/False; TPU: collective-axis choice).
 MeasureFn = Callable[[Op, int, bool], float]
+
+
+class CurveCache(Protocol):
+    """Cross-graph curve store the profiler consults before probing.
+
+    Implemented by ``repro.multitenant.plancache.PlanCache``; kept as a
+    protocol here so core has no dependency on the multitenant layer."""
+
+    def lookup(self, key: Hashable) -> "CurveModel | None": ...
+
+    def insert(self, key: Hashable, curve: "CurveModel") -> None: ...
+
+
+def cross_graph_key(op: Op) -> Hashable:
+    """Cache key for cross-graph curve reuse.
+
+    Within one graph, ``op.size_key`` = (op_class, input_shape) determines
+    cost by construction (see graph.py).  ACROSS graphs that invariant can
+    break — transformer builders encode d_model/n_layers in flops, not in
+    the shape — so the shared cache keys on the full analytic profile: two
+    ops share a curve only if the machine would genuinely time them
+    identically."""
+    return (op.op_class, op.input_shape, op.flops, op.bytes_moved,
+            op.working_set, op.parallel_fraction, op.tunable)
 
 
 # ---------------------------------------------------------------------------
@@ -168,11 +192,35 @@ class HillClimbProfiler:
         return CurveModel(samples=samples, case_lists=dict(self.case_lists),
                           probes=probes)
 
-    def profile_graph(self, graph: OpGraph) -> "ProfileStore":
+    def profile_graph(self, graph: OpGraph,
+                      cache: "CurveCache | None" = None) -> "ProfileStore":
+        """Profile every distinct (op_class, input_shape) in ``graph``.
+
+        ``cache`` is an optional cross-graph curve cache (see
+        ``repro.multitenant.plancache.PlanCache``): a curve another graph
+        already paid the profiling probes for is reused instead of
+        re-measured — the paper's profiling steps amortize across tenants,
+        not just across steps of one job.  Cache entries are keyed by
+        ``cross_graph_key`` (the op's full analytic profile), never by the
+        bare size_key, so tenants whose builders hide cost parameters
+        outside the input shape cannot poison each other's curves."""
         store = ProfileStore()
         for op in graph.ops.values():
-            if op.size_key not in store.curves:
-                store.curves[op.size_key] = self.profile(op)
+            if op.size_key in store.curves:
+                continue
+            key = cross_graph_key(op)
+            curve = cache.lookup(key) if cache is not None else None
+            if curve is not None:
+                # zero-probe view: this run paid nothing for the curve, so
+                # ProfileStore.total_probes / profiling_cost() only count
+                # probes actually measured here (the cache keeps the
+                # original probe count for its own amortization stats)
+                curve = dataclasses.replace(curve, probes=0)
+            else:
+                curve = self.profile(op)
+                if cache is not None:
+                    cache.insert(key, curve)
+            store.curves[op.size_key] = curve
         return store
 
 

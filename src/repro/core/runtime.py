@@ -26,7 +26,8 @@ from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
 from repro.core.concurrency import ConcurrencyController, ConcurrencyPlan
 from repro.core.graph import Op, OpGraph
 from repro.core.interference import InterferenceRecorder
-from repro.core.perfmodel import HillClimbProfiler, ProfileStore, paper_case_lists
+from repro.core.perfmodel import (CurveCache, HillClimbProfiler, ProfileStore,
+                                  paper_case_lists)
 from repro.core.scheduler import CorunScheduler, ScheduleResult, uniform_schedule
 from repro.core.simmachine import Placement, SimMachine
 
@@ -67,9 +68,13 @@ class TrainingSummary:
 
 class ConcurrencyRuntime:
     def __init__(self, machine: SimMachine | None = None,
-                 config: RuntimeConfig | None = None):
+                 config: RuntimeConfig | None = None,
+                 plan_cache: "CurveCache | None" = None):
         self.machine = machine or SimMachine()
         self.config = config or RuntimeConfig()
+        # optional cross-job curve cache (multi-tenant pool): profiling
+        # probes one job paid for are reused by every later job
+        self.plan_cache = plan_cache
         self.store: ProfileStore | None = None
         self.plan: ConcurrencyPlan | None = None
         self.controller: ConcurrencyController | None = None
@@ -82,12 +87,20 @@ class ConcurrencyRuntime:
             op, Placement(threads, cache_sharing=variant))
 
     def profile(self, graph: OpGraph) -> ProfileStore:
+        if self.plan_cache is not None:
+            # caches that can pin themselves must refuse reuse across a
+            # different timing function OR probe protocol: a curve's
+            # measured samples carry the probe spacing, which Strategy-3
+            # candidates and the S2 clamp's case_step assume
+            bind = getattr(self.plan_cache, "bind_machine", None)
+            if bind is not None:
+                bind((self.machine.fingerprint, self.config.interval))
         profiler = HillClimbProfiler(
             measure=self._measure,
             case_lists=paper_case_lists(self.machine.spec.cores,
                                         self.machine.spec.tiles),
             interval=self.config.interval)
-        self.store = profiler.profile_graph(graph)
+        self.store = profiler.profile_graph(graph, cache=self.plan_cache)
         self.controller = ConcurrencyController(
             self.store, max_deviation=self.config.max_deviation,
             default_threads=self.machine.spec.cores,
@@ -103,7 +116,9 @@ class ConcurrencyRuntime:
         assert self.store is not None
         probes_per_curve = [c.probes for c in self.store.curves.values()]
         n_steps = max(probes_per_curve) if probes_per_curve else 0
-        probe_time = sum(y for c in self.store.curves.values()
+        # curves served by a warm plan cache carry probes=0 — their sample
+        # times were paid by another job, not this run
+        probe_time = sum(y for c in self.store.curves.values() if c.probes
                          for pts in c.samples.values() for _, y in pts)
         return n_steps, probe_time
 

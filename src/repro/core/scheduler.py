@@ -29,6 +29,7 @@ import dataclasses
 import heapq
 import itertools
 from collections import deque
+from typing import Iterable
 
 from repro.core.concurrency import ConcurrencyPlan, ConcurrencyController, OpPlan
 from repro.core.graph import Op, OpGraph
@@ -71,8 +72,38 @@ class ScheduleResult:
         return out
 
 
+def free_cores(running: Iterable[ScheduledOp], total_cores: int) -> int:
+    """Physical cores not occupied by non-hyper-thread runners."""
+    used = sum(r.threads for r in running if not r.hyper)
+    return max(0, total_cores - used)
+
+
+def remaining_horizon(running: Iterable[ScheduledOp], clock: float) -> float:
+    """Longest remaining time among running ops — Strategy 3's throughput
+    guard: a new co-runner must not outlast everything already running."""
+    return max((r.finish - clock for r in running), default=float("inf"))
+
+
+def pick_admissible(cands: list[OpPlan], free: int,
+                    horizon: float) -> OpPlan | None:
+    """Strategy 3's admission rule, shared by the single-graph scheduler
+    and the multi-tenant pool: admissible = fits the idle cores AND won't
+    outlast the running set; among admissible candidates pick the FEWEST
+    threads (the paper deliberately leaves cores free for more
+    co-runners)."""
+    adm = [c for c in cands
+           if c.threads <= free and c.predicted_time <= horizon]
+    return min(adm, key=lambda c: c.threads) if adm else None
+
+
 class _EventSim:
-    """Shared discrete-event machinery."""
+    """Shared discrete-event machinery over one graph.
+
+    The multi-tenant pool (``repro.multitenant.pool``) runs the same
+    launch/complete event loop over many graphs at once (its ``_PoolSim``
+    keys nodes by ``(jid, uid)``) and keeps the ``ScheduledOp`` record and
+    event-timeline conventions defined here, so pool records and
+    single-graph records stay interchangeable."""
 
     def __init__(self, graph: OpGraph):
         self.graph = graph
@@ -130,8 +161,10 @@ class CorunScheduler:
 
     # ------------------------------------------------------------------
     def _bw_share(self, threads: int, sim: _EventSim) -> float:
-        total = threads + sum(r.threads for r in sim.running.values())
-        return max(0.25, threads / max(total, 1))
+        # contention policy lives on the machine so every scheduler
+        # (this one, the multi-tenant pool) divides bandwidth identically
+        return self.machine.corun_bw_share(
+            threads, (r.threads for r in sim.running.values()))
 
     def _duration(self, op: Op, plan: OpPlan, hyper: bool,
                   sim: _EventSim) -> float:
@@ -156,8 +189,7 @@ class CorunScheduler:
                                      plan.predicted_time, dur)
 
     def _free_cores(self, sim: _EventSim) -> int:
-        used = sum(r.threads for r in sim.running.values() if not r.hyper)
-        return max(0, self.cores - used)
+        return free_cores(sim.running.values(), self.cores)
 
     def _instance_plan(self, op: Op) -> OpPlan:
         base = self.plan.plan_for(op, strategy2=self.strategy2)
@@ -173,8 +205,7 @@ class CorunScheduler:
         if free <= 0 or not sim.ready:
             return False
         running_classes = [r.op.op_class for r in sim.running.values()]
-        horizon = max((r.finish - sim.clock for r in sim.running.values()),
-                      default=float("inf"))
+        horizon = remaining_horizon(sim.running.values(), sim.clock)
         # examine ready ops, prefer the most expensive first (they gate the
         # critical path)
         order = sorted(sim.ready,
@@ -185,12 +216,9 @@ class CorunScheduler:
             if not self.recorder.compatible(op.op_class, running_classes):
                 continue
             cands = self.controller.candidates_for(op, self.k)
-            admissible = [c for c in cands
-                          if c.threads <= free and c.predicted_time <= horizon]
-            if not admissible:
+            pick = pick_admissible(cands, free, horizon)
+            if pick is None:
                 continue
-            # fewest threads — maximize further co-running (paper's example)
-            pick = min(admissible, key=lambda c: c.threads)
             pick = self.plan.clamp(op, pick)
             if pick.threads > free:
                 continue
@@ -220,7 +248,7 @@ class CorunScheduler:
                           self.controller.store.curve(op).predict(
                               free, plan.variant))
         if sim.running:
-            horizon = max(r.finish - sim.clock for r in sim.running.values())
+            horizon = remaining_horizon(sim.running.values(), sim.clock)
             if plan.predicted_time > horizon * self.fallback_slack:
                 return False
         sim.ready.remove(uid)

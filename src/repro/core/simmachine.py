@@ -29,6 +29,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import zlib
+from typing import Iterable
 
 from repro.core.graph import Op
 from repro.hw.spec import KNL, KnlLikeSpec
@@ -59,6 +60,13 @@ class SimMachine:
         self.jitter = jitter
         self.seed = seed
 
+    @property
+    def fingerprint(self) -> tuple:
+        """Identity of the timing function: curves measured on one machine
+        are only valid on a machine with the same fingerprint (used by the
+        cross-job PlanCache to refuse cross-machine reuse)."""
+        return (self.spec, self.jitter, self.seed)
+
     # ------------------------------------------------------------------
     def _jitter_factor(self, op: Op, placement: Placement) -> float:
         if self.jitter == 0.0:
@@ -72,6 +80,16 @@ class SimMachine:
         # MCDRAM saturates around ~16 streams; share models co-run contention.
         sat = min(1.0, threads / 16.0 + 0.15)
         return self.spec.mcdram_bandwidth * sat * bw_share
+
+    def corun_bw_share(self, threads: int,
+                       co_running_threads: Iterable[int]) -> float:
+        """Bandwidth fraction a ``threads``-wide launch gets next to the
+        given co-runners — the machine owns the contention policy so every
+        scheduler (single-graph co-run, multi-tenant pool) divides MCDRAM
+        the same way.  Floored at 0.25: even a narrow op keeps a minimum
+        stream share (MCDRAM is not perfectly fair-queued)."""
+        total = threads + sum(co_running_threads)
+        return max(0.25, threads / max(total, 1))
 
     def op_time(self, op: Op, placement: Placement, *,
                 bw_share: float = 1.0) -> float:

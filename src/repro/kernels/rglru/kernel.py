@@ -39,8 +39,10 @@ def _rglru_kernel(a_ref, x_ref, o_ref, hlast_ref, h_ref, *, chunk: int):
         a_t = jax.lax.dynamic_slice_in_dim(a, t, 1, axis=0)   # (1,R)
         b_t = jax.lax.dynamic_slice_in_dim(b, t, 1, axis=0)
         h = a_t * h + b_t
-        pl.store(o_ref, (0, pl.ds(t, 1), slice(None)),
-                 h.astype(o_ref.dtype))
+        # all-slice index: an int dim-0 index breaks older pallas
+        # NDIndexer handling (idx.indices entries must have .shape)
+        pl.store(o_ref, (pl.ds(0, 1), pl.ds(t, 1), slice(None)),
+                 h[None].astype(o_ref.dtype))
         return h
 
     h = jax.lax.fori_loop(0, chunk, step, h_ref[...])

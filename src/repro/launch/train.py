@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config
 from repro.data import DataConfig, Prefetcher, make_source
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, use_mesh
 from repro.models import zoo
 from repro.models.common import default_plan, replicated_plan
 from repro.optim import AdamWConfig
@@ -86,7 +86,7 @@ def main() -> None:
     heartbeat = Heartbeat(os.path.join(args.ckpt_dir, "heartbeat.json"))
     monitor = StragglerMonitor()
 
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         state = init_state(cfg, tcfg, jax.random.PRNGKey(0))
         if len(mesh.devices.ravel()) > 1:
             st_sh = named_sharding_tree(plan, mesh, state_specs(cfg, tcfg))

@@ -1,0 +1,25 @@
+"""Multi-tenant runtime pool: many op graphs co-scheduled on one machine.
+
+Layers (each builds on ``repro.core``, none of core depends back):
+
+  job        -- Job + JobQueue admission controller (priority, demand cap,
+                weighted-fair-share accounting in perfmodel core-seconds)
+  plancache  -- cross-job curve cache (keyed by the op's full analytic
+                profile) so one tenant's profiling probes amortize over
+                every tenant
+  pool       -- PoolScheduler (Strategies 3/4 over a multi-job frontier,
+                job-aware Strategy-2 clamp, cross-job interference
+                blacklist) + RuntimePool driver and serial baseline
+"""
+
+from repro.multitenant.job import Job, JobQueue, fairness_index
+from repro.multitenant.plancache import PlanCache
+from repro.multitenant.pool import (PoolConfig, PoolResult, PoolScheduler,
+                                    RuntimePool, SerialResult)
+
+__all__ = [
+    "Job", "JobQueue", "fairness_index",
+    "PlanCache",
+    "PoolConfig", "PoolResult", "PoolScheduler", "RuntimePool",
+    "SerialResult",
+]

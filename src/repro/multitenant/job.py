@@ -1,0 +1,154 @@
+"""Jobs and admission control for the multi-tenant runtime pool.
+
+A *job* is one tenant's workload: an ``OpGraph`` (a training step, a
+serving wave) plus — once admitted — the frozen ``ConcurrencyPlan`` the
+paper's Strategies 1-2 produce for it.  ``JobQueue`` is the admission
+controller: jobs wait in priority order and are admitted while the pool
+has an active-job slot and the job's *predicted demand* (core-seconds,
+the ``perfmodel`` cost currency) fits under the outstanding-demand cap.
+
+Fair sharing uses the classic weighted virtual-time rule: each job
+accrues ``service`` (core-seconds actually granted) and the scheduler
+always prefers the job with the smallest ``service / priority``.  Charging
+service at launch time (not completion) makes the share responsive within
+a single scheduling instant.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import itertools
+
+from repro.core.concurrency import ConcurrencyController, ConcurrencyPlan
+from repro.core.graph import OpGraph
+
+
+@dataclasses.dataclass
+class Job:
+    """One admitted-or-waiting tenant workload."""
+
+    jid: int
+    name: str
+    graph: OpGraph
+    priority: float = 1.0             # weight in the fair-share rule
+    submit_time: float = 0.0
+    # filled at profiling/admission time
+    plan: ConcurrencyPlan | None = None
+    controller: ConcurrencyController | None = None
+    demand: float = 0.0               # predicted core-seconds (perfmodel)
+    # accounting, maintained by the pool
+    admit_time: float | None = None
+    finish_time: float | None = None
+    service: float = 0.0              # core-seconds granted so far
+    ops_done: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.finish_time is not None
+
+    @property
+    def latency(self) -> float:
+        """Submit-to-finish (includes queueing) — the per-tenant SLO view."""
+        assert self.finish_time is not None
+        return self.finish_time - self.submit_time
+
+    @property
+    def queue_wait(self) -> float:
+        assert self.admit_time is not None
+        return self.admit_time - self.submit_time
+
+    @property
+    def virtual_time(self) -> float:
+        """Weighted service — the fair-share ordering key (smaller = owed)."""
+        return self.service / max(self.priority, 1e-9)
+
+
+class JobQueue:
+    """Priority-ordered admission controller with a demand cap.
+
+    ``max_active`` bounds concurrently admitted jobs (each admitted graph's
+    ready frontier competes for cores — too many tenants and the Strategy-3
+    horizon guard starts rejecting everything).  ``max_outstanding_demand``
+    optionally bounds the summed predicted core-seconds of active jobs; a
+    job whose demand would overflow the cap waits, but is never skipped in
+    favor of a lower-priority job (no starvation by overtaking).  The cap
+    is deliberately waived when the pool is idle: a job bigger than the
+    cap must still run eventually, alone — otherwise it would deadlock
+    the queue."""
+
+    def __init__(self, max_active: int = 3,
+                 max_outstanding_demand: float | None = None):
+        self.max_active = max_active
+        self.max_outstanding_demand = max_outstanding_demand
+        # kept sorted by (-priority, submit_time, seq): strict priority,
+        # FIFO within a level (seq is unique, so Jobs are never compared)
+        self._waiting: list[tuple[float, float, int, Job]] = []
+        self._seq = itertools.count()
+        self.submitted: list[Job] = []
+
+    def submit(self, job: Job) -> None:
+        bisect.insort(self._waiting,
+                      (-job.priority, job.submit_time, next(self._seq), job))
+        self.submitted.append(job)
+
+    def __len__(self) -> int:
+        return len(self._waiting)
+
+    def peek(self) -> Job | None:
+        return self._waiting[0][3] if self._waiting else None
+
+    def next_arrival(self, now: float) -> float | None:
+        """Earliest submit_time strictly in the future, or None."""
+        future = [j.submit_time for _, _, _, j in self._waiting
+                  if j.submit_time > now]
+        return min(future) if future else None
+
+    def pop_admissible(self, active: list[Job],
+                       now: float = float("inf")) -> Job | None:
+        """Next job to admit given the currently active set, or None.
+
+        Highest priority among jobs that have already arrived
+        (``submit_time <= now``); within a priority level, FIFO.  The
+        demand cap never lets a lower-priority job overtake one that is
+        merely too big — the big job waits, everything behind it waits too
+        (strict priority, no starvation by overtaking)."""
+        if len(active) >= self.max_active:
+            return None
+        for i, (_, _, _, job) in enumerate(self._waiting):
+            if job.submit_time > now:
+                continue
+            if self.max_outstanding_demand is not None and active:
+                outstanding = sum(j.demand for j in active)
+                if outstanding + job.demand > self.max_outstanding_demand:
+                    return None
+            self._waiting.pop(i)
+            return job
+        return None
+
+
+def jain(values: list[float]) -> float:
+    """Jain's fairness index: 1.0 = all equal, 1/n = one takes all.
+    Empty or all-zero inputs count as perfectly fair (nothing competed)."""
+    if not values:
+        return 1.0
+    s = sum(values)
+    sq = sum(x * x for x in values)
+    if sq == 0:
+        return 1.0
+    return (s * s) / (len(values) * sq)
+
+
+def fairness_index(jobs: list[Job]) -> float:
+    """Jain's fairness index over priority-normalized service.
+
+    1.0 = every job got service exactly proportional to its priority;
+    1/n = one job got everything.  Computed over jobs that were admitted.
+
+    Caveat: in a run-to-completion pool, final service converges to each
+    job's own demand whatever the scheduler did, so this index mostly
+    reflects demand/priority skew of the MIX.  To judge the SCHEDULER,
+    use ``PoolResult.slowdown_fairness`` (per-job latency relative to
+    running alone), where a starved tenant shows up as a large slowdown."""
+    return jain([j.service / max(j.priority, 1e-9)
+                 for j in jobs if j.admit_time is not None])

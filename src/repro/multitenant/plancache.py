@@ -1,0 +1,90 @@
+"""Cross-job plan cache: amortize profiling probes across tenants.
+
+The paper amortizes its profiling steps across the *steps of one job*
+(§IV-A: the same step graph repeats for thousands of iterations).  A
+multi-tenant pool adds a second amortization axis: distinct jobs share op
+classes and input sizes — a ResNet step and an Inception step both spend
+most of their time in ``Conv2DBackpropFilter`` at Table-II sizes — so a
+curve one tenant paid hill-climb probes for is valid for every other
+tenant on the same machine (the curve measures the machine, not the job).
+Entries are keyed by ``repro.core.perfmodel.cross_graph_key`` — the op's
+full analytic profile, not just the paper's ``(op_class, input_shape)``
+unit — because across independently-built graphs the same class+shape can
+hide different cost parameters (e.g. transformer depth lives in flops).
+
+``PlanCache`` implements the ``repro.core.perfmodel.CurveCache`` protocol
+consulted by ``HillClimbProfiler.profile_graph``; it additionally keeps
+hit/probe accounting so benchmarks can report how many probes the pool
+saved versus profiling every job in isolation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Hashable
+
+from repro.core.perfmodel import CurveModel
+
+
+@dataclasses.dataclass
+class PlanCache:
+    """Shared cross_graph_key(op) -> CurveModel store with accounting.
+
+    Key with ``repro.core.perfmodel.cross_graph_key`` (the op's full
+    analytic profile), NOT ``op.size_key`` — see the module docstring."""
+
+    curves: dict[Hashable, CurveModel] = dataclasses.field(
+        default_factory=dict)
+    hits: int = 0
+    misses: int = 0
+    probes_saved: int = 0       # probes a hit avoided re-paying
+    machine_fingerprint: Hashable | None = None
+
+    def bind_machine(self, fingerprint: Hashable) -> None:
+        """Pin the cache to one profiling context (timing function +
+        probe protocol — see ConcurrencyRuntime.profile).  Curves measure
+        a machine through a probe grid; sharing one cache across different
+        machines or probe intervals would serve wrong curves with no
+        error, so the first binder wins and any different context is
+        rejected."""
+        if self.machine_fingerprint is None:
+            self.machine_fingerprint = fingerprint
+        elif self.machine_fingerprint != fingerprint:
+            raise ValueError(
+                "PlanCache is bound to a different machine/profiling "
+                f"context ({self.machine_fingerprint!r} != {fingerprint!r});"
+                " use one cache per machine and probe interval")
+
+    # ---- CurveCache protocol -----------------------------------------
+    def lookup(self, key: Hashable) -> CurveModel | None:
+        curve = self.curves.get(key)
+        if curve is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self.probes_saved += curve.probes
+        return curve
+
+    def insert(self, key: Hashable, curve: CurveModel) -> None:
+        self.curves[key] = curve
+
+    # ---- accounting ---------------------------------------------------
+    @property
+    def probes_spent(self) -> int:
+        """Probes actually measured (each distinct curve paid once)."""
+        return sum(c.probes for c in self.curves.values())
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict[str, float]:
+        return {
+            "curves": len(self.curves),
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hit_rate,
+            "probes_spent": self.probes_spent,
+            "probes_saved": self.probes_saved,
+        }

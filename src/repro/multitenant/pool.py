@@ -1,0 +1,477 @@
+"""Runtime pool: co-schedule many op graphs on one simulated machine.
+
+This generalizes ``repro.core.scheduler.CorunScheduler`` from *one step
+graph* to *many tenants*: the paper's Strategy-3 candidate selection draws
+ready ops from every admitted job's frontier, the Strategy-2 clamp applies
+each op's **own job's** frozen plan, Strategy 4's hyper-thread lane picks
+the globally smallest ready op, and the interference blacklist spans
+co-runners from different jobs (a class pair that thrashes MCDRAM thrashes
+it regardless of which tenant launched each side).
+
+Cross-job decisions need a currency; following value-function schedulers
+(Steiner et al.) we use the ``perfmodel`` predictions already frozen in
+each job's plan: a job's *demand* is its predicted core-seconds, its
+*service* the core-seconds actually granted, and the pool always prefers
+the job with the smallest priority-weighted service (weighted fair share).
+Service is charged at launch so the share is responsive within one
+scheduling instant; hyper-thread launches are charged at the machine's
+hyper-thread efficiency (they borrow spare lanes, not whole cores).
+
+``RuntimePool`` is the driver: submit jobs (graph + priority + arrival
+time), run, get a ``PoolResult`` with per-job latency, fairness, and
+plan-cache amortization stats.  ``RuntimePool.run_serial`` replays the
+same job mix one graph at a time — the baseline the multitenant
+benchmarks compare against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+
+from repro.core.concurrency import OpPlan
+from repro.core.graph import Op, OpGraph
+from repro.core.interference import InterferenceRecorder
+from repro.core.runtime import ConcurrencyRuntime, RuntimeConfig
+from repro.core.scheduler import (ScheduledOp, ScheduleResult, free_cores,
+                                  pick_admissible, remaining_horizon)
+from repro.core.simmachine import Placement, SimMachine
+from repro.multitenant.job import Job, JobQueue, fairness_index, jain
+from repro.multitenant.plancache import PlanCache
+
+NodeKey = tuple[int, int]           # (jid, uid)
+
+
+@dataclasses.dataclass
+class PoolConfig:
+    """Pool-level knobs (admission + fallback), composed with the per-job
+    ``RuntimeConfig`` so every profiling/strategy knob lives in exactly
+    one place and the pool's delegated runtimes see the same settings."""
+
+    max_active: int = 3             # admission: concurrent tenants
+    max_outstanding_demand: float | None = None   # admission: core-seconds
+    min_fallback_cores: int = 4
+    fallback_slack: float = 1.25
+    runtime: RuntimeConfig = dataclasses.field(default_factory=RuntimeConfig)
+
+
+class _PoolSim:
+    """Discrete-event state over many graphs — the multi-tenant EventSim.
+
+    Same launch/complete/event conventions as ``core.scheduler.EventSim``
+    but nodes are ``(jid, uid)`` and each job keeps its own pending/ready
+    frontier so per-job dependency tracking never crosses tenants."""
+
+    def __init__(self) -> None:
+        self.clock = 0.0
+        self.graphs: dict[int, OpGraph] = {}
+        self.pending: dict[int, dict[int, int]] = {}
+        self.ready: dict[int, list[int]] = {}       # jid -> ready uids
+        self.heap: list[tuple[float, int, NodeKey]] = []
+        self.running: dict[NodeKey, ScheduledOp] = {}
+        self.records: dict[int, list[ScheduledOp]] = {}
+        self.events: list[tuple[float, int]] = []
+        self._seq = itertools.count()
+
+    def admit(self, job: Job) -> None:
+        g = job.graph
+        self.graphs[job.jid] = g
+        self.pending[job.jid] = {u: len(op.deps) for u, op in g.ops.items()}
+        self.ready[job.jid] = sorted(g.sources())
+        self.records[job.jid] = []
+
+    def op(self, key: NodeKey) -> Op:
+        return self.graphs[key[0]].ops[key[1]]
+
+    def ready_keys(self) -> list[NodeKey]:
+        return [(jid, uid) for jid, uids in self.ready.items()
+                for uid in uids]
+
+    def launch(self, key: NodeKey, sched: ScheduledOp) -> None:
+        self.ready[key[0]].remove(key[1])
+        self.running[key] = sched
+        heapq.heappush(self.heap, (sched.finish, next(self._seq), key))
+        self.events.append((self.clock, len(self.running)))
+
+    def complete_next(self) -> tuple[int, ScheduledOp]:
+        finish, _, key = heapq.heappop(self.heap)
+        self.clock = finish
+        jid, uid = key
+        sched = self.running.pop(key)
+        self.records[jid].append(sched)
+        for c in self.graphs[jid].consumers(uid):
+            self.pending[jid][c] -= 1
+            if self.pending[jid][c] == 0:
+                self.ready[jid].append(c)
+        self.events.append((self.clock, len(self.running)))
+        return jid, sched
+
+    def job_done(self, jid: int) -> bool:
+        return (not self.ready[jid]
+                and not any(k[0] == jid for k in self.running))
+
+    @property
+    def any_ready(self) -> bool:
+        return any(self.ready.values())
+
+
+@dataclasses.dataclass
+class PoolResult:
+    makespan: float
+    jobs: list[Job]
+    records: dict[int, list[ScheduledOp]]      # jid -> per-op records
+    events: list[tuple[float, int]]            # (time, #co-running)
+    cache_stats: dict[str, float]
+
+    @property
+    def total_ops(self) -> int:
+        return sum(len(r) for r in self.records.values())
+
+    @property
+    def aggregate_throughput(self) -> float:
+        """Ops completed per second across all tenants."""
+        return self.total_ops / max(self.makespan, 1e-12)
+
+    @property
+    def fairness(self) -> float:
+        return fairness_index(self.jobs)
+
+    def slowdown_fairness(self, solo_makespans: dict[int, float]) -> float:
+        """Jain index over per-job slowdown (pool latency / makespan the
+        job would have alone).  Unlike cumulative-service ``fairness``,
+        this measures what the scheduler DID: a tenant starved for most of
+        the run carries a large slowdown and drags the index toward 1/n."""
+        return jain([j.latency / max(solo_makespans[j.jid], 1e-12)
+                     for j in self.jobs
+                     if j.done and j.jid in solo_makespans])
+
+    @property
+    def mean_latency(self) -> float:
+        done = [j for j in self.jobs if j.done]
+        return sum(j.latency for j in done) / max(len(done), 1)
+
+    def per_job_schedule(self, jid: int) -> ScheduleResult:
+        """One job's records in the single-graph result type (global
+        timestamps), so existing analysis/plot helpers apply unchanged.
+        The events timeline is rebuilt from THIS job's records — the
+        pool-wide timeline would misreport the job's own concurrency."""
+        recs = self.records[jid]
+        deltas = sorted([(r.start, 1) for r in recs]
+                        + [(r.finish, -1) for r in recs])
+        events: list[tuple[float, int]] = []
+        n = 0
+        for t, d in deltas:
+            n += d
+            events.append((t, n))
+        return ScheduleResult(
+            makespan=max((r.finish for r in recs), default=0.0),
+            records=recs, events=events)
+
+
+class PoolScheduler:
+    """Strategy 3/4 admission generalized to a multi-job ready frontier."""
+
+    def __init__(self, machine: SimMachine, config: PoolConfig, *,
+                 recorder: InterferenceRecorder):
+        self.machine = machine
+        self.config = config
+        self.recorder = recorder
+        self.cores = machine.spec.cores
+
+    # ---- shared helpers (job-aware versions of CorunScheduler's) -------
+    def _free_cores(self, sim: _PoolSim) -> int:
+        return free_cores(sim.running.values(), self.cores)
+
+    def _instance_plan(self, job: Job, op: Op) -> OpPlan:
+        assert job.plan is not None and job.controller is not None
+        base = job.plan.plan_for(op, strategy2=self.config.runtime.strategy2)
+        curve = job.controller.store.curve(op)
+        return OpPlan(base.threads, base.variant,
+                      curve.predict(base.threads, base.variant))
+
+    def _duration(self, op: Op, plan: OpPlan, hyper: bool,
+                  sim: _PoolSim) -> float:
+        pl = Placement(plan.threads, cache_sharing=plan.variant,
+                       hyper_thread=hyper)
+        share = self.machine.corun_bw_share(
+            plan.threads, (r.threads for r in sim.running.values()))
+        return self.machine.op_time(op, pl, bw_share=share)
+
+    def _launch(self, sim: _PoolSim, job: Job, uid: int, plan: OpPlan,
+                hyper: bool) -> None:
+        op = sim.graphs[job.jid].ops[uid]
+        dur = self._duration(op, plan, hyper, sim)
+        sched = ScheduledOp(op=op, threads=plan.threads, variant=plan.variant,
+                            hyper=hyper, start=sim.clock,
+                            finish=sim.clock + dur,
+                            predicted=plan.predicted_time)
+        # cross-job interference bookkeeping, same class-pair key as the
+        # single-graph scheduler (the machine doesn't care who launched)
+        for other in sim.running.values():
+            self.recorder.record(op.op_class, other.op.op_class,
+                                 plan.predicted_time, dur)
+        sim.launch((job.jid, uid), sched)
+        # weighted fair share: charge core-seconds at launch time
+        eff = (self.machine.spec.hyper_thread_efficiency if hyper else 1.0)
+        job.service += plan.threads * dur * eff
+
+    def _jobs_by_share(self, active: list[Job], sim: _PoolSim) -> list[Job]:
+        """Jobs owed service first; only jobs with ready ops."""
+        return sorted((j for j in active if sim.ready[j.jid]),
+                      key=lambda j: (j.virtual_time, j.jid))
+
+    # ---- Strategy 3 across jobs ---------------------------------------
+    def try_corun(self, sim: _PoolSim, active: list[Job]) -> bool:
+        free = self._free_cores(sim)
+        if free <= 0 or not sim.any_ready:
+            return False
+        running_classes = [r.op.op_class for r in sim.running.values()]
+        horizon = remaining_horizon(sim.running.values(), sim.clock)
+        for job in self._jobs_by_share(active, sim):
+            assert job.controller is not None and job.plan is not None
+            order = sorted(
+                sim.ready[job.jid],
+                key=lambda u: -self._instance_plan(
+                    job, sim.graphs[job.jid].ops[u]).predicted_time)
+            for uid in order:
+                op = sim.graphs[job.jid].ops[uid]
+                if not self.recorder.compatible(op.op_class, running_classes):
+                    continue
+                cands = job.controller.candidates_for(
+                    op, self.config.runtime.candidates)
+                pick = pick_admissible(cands, free, horizon)
+                if pick is None:
+                    continue
+                pick = job.plan.clamp(op, pick)     # job-aware S2 clamp
+                if pick.threads > free:
+                    continue
+                self._launch(sim, job, uid, pick, hyper=False)
+                return True
+        return False
+
+    # ---- fallback: biggest ready op, most-owed job first ----------------
+    def run_biggest(self, sim: _PoolSim, active: list[Job]) -> bool:
+        free = self._free_cores(sim)
+        if free <= 0 or not sim.any_ready:
+            return False
+        if sim.running and free < self.config.min_fallback_cores:
+            return False
+        horizon = (remaining_horizon(sim.running.values(), sim.clock)
+                   if sim.running else float("inf"))
+        # unlike the single-graph fallback there are other tenants to try:
+        # if the most-owed job's biggest op would outlast the running set,
+        # a later job's op may still fit — don't idle the cores over it
+        for job in self._jobs_by_share(active, sim):
+            uid = max(sim.ready[job.jid],
+                      key=lambda u: self._instance_plan(
+                          job, sim.graphs[job.jid].ops[u]).predicted_time)
+            op = sim.graphs[job.jid].ops[uid]
+            plan = self._instance_plan(job, op)
+            if plan.threads > free:
+                assert job.controller is not None
+                plan = OpPlan(free, plan.variant,
+                              job.controller.store.curve(op).predict(
+                                  free, plan.variant))
+            if plan.predicted_time > horizon * self.config.fallback_slack:
+                continue
+            self._launch(sim, job, uid, plan, hyper=False)
+            return True
+        return False
+
+    # ---- Strategy 4 across jobs ---------------------------------------
+    def try_hyper(self, sim: _PoolSim, active: list[Job]) -> bool:
+        if not self.config.runtime.enable_s4 or not sim.any_ready:
+            return False
+        if self._free_cores(sim) > 0:
+            return False
+        ht_running = sum(1 for r in sim.running.values() if r.hyper)
+        if ht_running >= self.config.runtime.max_ht_corunners:
+            return False
+        running_classes = [r.op.op_class for r in sim.running.values()]
+        by_jid = {j.jid: j for j in active}
+
+        def serial_time(key: NodeKey) -> tuple[float, float, int, int]:
+            job = by_jid[key[0]]
+            assert job.controller is not None
+            op = sim.op(key)
+            return (job.controller.store.curve(op).predict(1, False),
+                    job.virtual_time, key[0], key[1])
+
+        for key in sorted(sim.ready_keys(), key=serial_time):
+            job = by_jid[key[0]]
+            op = sim.op(key)
+            if not self.recorder.compatible(op.op_class, running_classes):
+                continue
+            inst = self._instance_plan(job, op)
+            plan = OpPlan(min(inst.threads, self.cores), inst.variant,
+                          inst.predicted_time)
+            self._launch(sim, job, key[1], plan, hyper=True)
+            return True
+        return False
+
+
+@dataclasses.dataclass
+class SerialResult:
+    """The run-one-graph-at-a-time baseline over the same job mix."""
+
+    makespan: float
+    job_makespans: dict[int, float]
+    job_latencies: dict[int, float]
+    total_ops: int
+    profiling_probes: int
+
+    @property
+    def aggregate_throughput(self) -> float:
+        return self.total_ops / max(self.makespan, 1e-12)
+
+
+class RuntimePool:
+    """Admission + pool scheduling driver (the multi-tenant Fig-2 loop)."""
+
+    def __init__(self, machine: SimMachine | None = None,
+                 config: PoolConfig | None = None,
+                 plan_cache: PlanCache | None = None):
+        self.machine = machine or SimMachine()
+        self.config = config or PoolConfig()
+        self.plan_cache = plan_cache if plan_cache is not None else PlanCache()
+        self.recorder = InterferenceRecorder(
+            threshold=self.config.runtime.interference_threshold)
+        self.queue = JobQueue(
+            max_active=self.config.max_active,
+            max_outstanding_demand=self.config.max_outstanding_demand)
+        self.scheduler = PoolScheduler(self.machine, self.config,
+                                       recorder=self.recorder)
+        self.jobs: list[Job] = []
+        self._jid = itertools.count()
+
+    # ---- profiling (amortized through the shared PlanCache) ------------
+    def _profile_job(self, job: Job, cache: PlanCache | None) -> None:
+        # one profiling pipeline for both the pool and the per-step
+        # runtime: delegate to ConcurrencyRuntime.profile (which also
+        # binds the cache to this machine)
+        rt = ConcurrencyRuntime(machine=self.machine,
+                                config=self.config.runtime,
+                                plan_cache=cache)
+        rt.profile(job.graph)
+        assert rt.controller is not None and rt.plan is not None
+        job.controller = rt.controller
+        job.plan = rt.plan
+        # predicted demand in core-seconds — the admission/fair-share
+        # currency (perfmodel predictions, not measurements)
+        demand = 0.0
+        for op in job.graph.ops.values():
+            p = job.plan.per_instance[op.size_key]
+            demand += p.predicted_time * p.threads
+        job.demand = demand
+
+    # ---- public API -----------------------------------------------------
+    def submit(self, graph: OpGraph, *, priority: float = 1.0,
+               name: str | None = None, submit_time: float = 0.0) -> Job:
+        job = Job(jid=next(self._jid), name=name or graph.name, graph=graph,
+                  priority=priority, submit_time=submit_time)
+        self._profile_job(job, self.plan_cache)
+        self.jobs.append(job)
+        self.queue.submit(job)
+        return job
+
+    def _admit(self, sim: _PoolSim, active: list[Job]) -> None:
+        while True:
+            job = self.queue.pop_admissible(active, now=sim.clock)
+            if job is None:
+                return
+            job.admit_time = sim.clock
+            sim.admit(job)
+            if not sim.ready[job.jid]:      # zero-op graph: done on arrival
+                job.finish_time = sim.clock
+                continue
+            active.append(job)
+
+    def run(self) -> PoolResult:
+        sim = _PoolSim()
+        active: list[Job] = []
+        sched = self.scheduler
+        self._admit(sim, active)
+        while active or len(self.queue):
+            if not active:
+                # idle until the next tenant arrives
+                nxt = self.queue.next_arrival(sim.clock)
+                assert nxt is not None, "queued jobs but none admissible"
+                sim.clock = nxt
+                self._admit(sim, active)
+                continue
+            launched = True
+            while launched:
+                launched = False
+                # same strategy gating as CorunScheduler.run: S3 off means
+                # serial launches only (the serial baseline honors the
+                # flag too, so comparisons stay apples-to-apples)
+                if self.config.runtime.enable_s3:
+                    if sim.running:
+                        launched = sched.try_corun(sim, active)
+                        if not launched:
+                            launched = sched.run_biggest(sim, active)
+                    else:
+                        launched = sched.run_biggest(sim, active)
+                elif not sim.running:
+                    launched = sched.run_biggest(sim, active)
+                if not launched:
+                    launched = sched.try_hyper(sim, active)
+            if sim.running:
+                # a tenant arriving before the next op completes must not
+                # wait out that op: advance to the arrival, admit, and
+                # go back to launching on whatever cores are idle
+                nxt = (self.queue.next_arrival(sim.clock)
+                       if len(self.queue) else None)
+                if (nxt is not None and nxt < sim.heap[0][0]
+                        and len(active) < self.config.max_active):
+                    sim.clock = nxt
+                    self._admit(sim, active)
+                    continue
+                jid, _ = sim.complete_next()
+                job = next(j for j in active if j.jid == jid)
+                job.ops_done += 1
+                if sim.job_done(jid):
+                    job.finish_time = sim.clock
+                    active.remove(job)
+                self._admit(sim, active)
+        return PoolResult(makespan=sim.clock, jobs=list(self.jobs),
+                          records=sim.records, events=sim.events,
+                          cache_stats=self.plan_cache.stats())
+
+    # ---- baseline -------------------------------------------------------
+    def run_serial(self, *, share_cache: bool = False) -> SerialResult:
+        """The same job mix, one graph at a time (fresh jobs, fresh
+        profiling): the single-tenant status quo the pool competes with.
+
+        The baseline is deliberately priority-BLIND: it executes in plain
+        arrival order (FIFO), because the status quo it models — a
+        runtime that owns the whole machine per job — has no admission
+        tier at all.  Priority-aware queueing is itself a pool feature,
+        so latency comparisons against this baseline credit the pool for
+        both co-scheduling and priority scheduling.
+
+        ``share_cache=False`` means each job pays its own profiling probes
+        — isolating both pool advantages (co-scheduling AND probe
+        amortization) in the benchmark comparison."""
+        cache = PlanCache() if share_cache else None
+        clock = 0.0
+        job_makespans: dict[int, float] = {}
+        job_latencies: dict[int, float] = {}
+        total_ops = 0
+        probes = 0
+        for job in sorted(self.jobs, key=lambda j: (j.submit_time, j.jid)):
+            rt = ConcurrencyRuntime(machine=self.machine,
+                                    config=self.config.runtime,
+                                    plan_cache=cache)
+            rt.profile(job.graph)
+            assert rt.store is not None
+            probes += rt.store.total_probes
+            res = rt.execute_step(job.graph)
+            clock = max(clock, job.submit_time) + res.makespan
+            job_makespans[job.jid] = res.makespan
+            job_latencies[job.jid] = clock - job.submit_time
+            total_ops += len(res.records)
+        return SerialResult(makespan=clock, job_makespans=job_makespans,
+                            job_latencies=job_latencies, total_ops=total_ops,
+                            profiling_probes=probes)

@@ -1,4 +1,4 @@
-from repro.serving.engine import ServeEngine, Request, WaveStats
+from repro.serving.engine import ServeEngine, Request, WaveStats, wave_op_graph
 from repro.serving.kvcache import kv_cache_pspec, cache_shardings
-__all__ = ["ServeEngine", "Request", "WaveStats", "kv_cache_pspec",
-           "cache_shardings"]
+__all__ = ["ServeEngine", "Request", "WaveStats", "wave_op_graph",
+           "kv_cache_pspec", "cache_shardings"]

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.graph import GraphBuilder, OpGraph
 from repro.models import zoo
 from repro.models.common import ModelConfig
 
@@ -131,3 +132,91 @@ class ServeEngine:
         if not self.stats:
             return 0.0
         return sum(w.slot_utilization for w in self.stats) / len(self.stats)
+
+    # ---- multi-tenant pool integration --------------------------------
+    def pending_waves(self) -> list[list[Request]]:
+        """The wave partition ``run()`` would execute, without consuming
+        the queue — the unit a runtime pool schedules as one job."""
+        reqs = list(self.queue)
+        return [reqs[i:i + self.n_slots]
+                for i in range(0, len(reqs), self.n_slots)]
+
+    def submit_waves_to_pool(self, pool, *, priority: float = 1.0,
+                             arrival_gap: float = 0.0) -> list:
+        """Submit every pending wave to a ``repro.multitenant.RuntimePool``
+        as one job each (wave i arrives at ``i * arrival_gap``), so serving
+        waves co-schedule against training steps and other tenants on the
+        shared machine.  Returns the created jobs; the engine's real-JAX
+        queue is left untouched."""
+        jobs = []
+        for i, wave in enumerate(self.pending_waves()):
+            g = wave_op_graph(self.cfg, wave, n_slots=self.n_slots,
+                              name=f"{self.cfg.arch_id}-wave{i}")
+            jobs.append(pool.submit(g, priority=priority,
+                                    name=g.name,
+                                    submit_time=i * arrival_gap))
+        return jobs
+
+
+def wave_op_graph(cfg: ModelConfig, wave: list[Request], *,
+                  n_slots: int | None = None,
+                  name: str | None = None) -> OpGraph:
+    """Analytic op graph of one serving wave (batched prefill + lock-step
+    decode), in the same IR the paper's runtime schedules.
+
+    Per-layer prefill ops carry the wave's (n_requests, prompt_len) token
+    block; decode is one small op per lock-step token.  Flops/bytes use
+    the standard transformer estimates (attn 8*d^2 + mlp ~6*d*d_ff per
+    token-layer), so the pool's perfmodel sees prefill as big tunable ops
+    and decode as the Strategy-4 "small op" population — exactly the mix
+    that benefits from co-scheduling against a training tenant.
+
+    ``n_slots``: the engine computes full n_slots-row batches even for a
+    partial final wave (padding rows are real machine load), so cost
+    terms use the padded batch when given."""
+    if not wave:
+        raise ValueError("wave_op_graph: empty wave (no requests)")
+    n = max(len(wave), n_slots or 0)
+    plen = max(len(r.prompt) for r in wave)
+    # worst-case lock-step decode length, exactly as _run_wave bounds its
+    # loop (max_len sizes the KV cache there, it does not cap the steps)
+    max_new = max(r.max_new_tokens for r in wave)
+    d = float(cfg.d_model)
+    dff = float(cfg.d_ff)
+    layer_params = 4 * d * d + 3 * d * dff      # attn qkvo + swiglu mlp
+    b = GraphBuilder(name or f"{cfg.arch_id}-wave")
+    tok = float(n * plen)
+    prev = b.add("wave_embed", (n, plen, cfg.d_model),
+                 flops=2 * tok * d, bytes_moved=tok * d * 4,
+                 parallel_fraction=0.85, tunable=False)
+    for li in range(cfg.n_layers):
+        attn = b.add("wave_prefill_attn", (n, plen, cfg.d_model),
+                     deps=[prev],
+                     flops=tok * (8 * d * d) + 4 * tok * plen * d,
+                     bytes_moved=tok * d * 8,
+                     parallel_fraction=0.97,
+                     name=f"wave_prefill_attn/{li}")
+        prev = b.add("wave_prefill_mlp", (n, plen, cfg.d_model),
+                     deps=[attn],
+                     flops=tok * 6 * d * dff, bytes_moved=tok * d * 6,
+                     parallel_fraction=0.98,
+                     name=f"wave_prefill_mlp/{li}")
+    # the prefill logits produce the wave's first token (unembed once)…
+    prev = b.add("wave_unembed", (n, 1, cfg.d_model), deps=[prev],
+                 flops=2 * n * d * cfg.vocab, bytes_moved=n * d * 4,
+                 parallel_fraction=0.95, tunable=False)
+    # …then lock-step decode: each step touches every weight once for n
+    # tokens INCLUDING the logits projection the engine runs per step —
+    # bandwidth-bound small ops chained by the autoregressive dependency.
+    # max_new - 1 steps, not max_new: the first generated token came from
+    # prefill above (see ServeEngine._run_wave).
+    step_params = cfg.n_layers * layer_params + d * cfg.vocab
+    step_flops = 2.0 * n * step_params
+    step_bytes = step_params * 2.0                 # stream weights (bf16)
+    for s in range(max(max_new - 1, 0)):
+        prev = b.add("wave_decode_step", (n, 1, cfg.d_model), deps=[prev],
+                     flops=step_flops, bytes_moved=step_bytes,
+                     working_set=step_bytes,
+                     parallel_fraction=0.80,
+                     name=f"wave_decode_step/{s}")
+    return b.build()

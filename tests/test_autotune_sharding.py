@@ -99,11 +99,10 @@ class TestShardingPlans:
         assert plan.rules["heads"] == ("mdl",)
 
     def test_validate_plan_catches_indivisible(self):
-        import jax
+        from repro.launch.mesh import make_mesh
         cfg = get_config("whisper-small")      # d_model 768
         plan = default_plan()
-        mesh = jax.make_mesh((1,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((1,), ("model",))
         problems = validate_plan(cfg, plan, mesh)
         assert problems == []                  # degree 1 always fine
 

@@ -31,9 +31,9 @@ def test_main_process_single_device():
 def test_collective_matmul_multidevice():
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_mesh
         from repro.sharding import ring_ag_matmul, reference_ag_matmul
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
         w = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
         with mesh:
@@ -52,6 +52,7 @@ def test_sharded_train_step_matches_single_device():
     code = """
         import jax, jax.numpy as jnp, numpy as np, dataclasses
         from repro.configs import get_config
+        from repro.launch.mesh import make_mesh, use_mesh
         from repro.models.common import default_plan
         from repro.sharding import named_sharding_tree
         from repro.train import (TrainConfig, init_state, make_train_step,
@@ -72,11 +73,10 @@ def test_sharded_train_step_matches_single_device():
         l_single = float(m1["loss"])
 
         # sharded run
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         plan = default_plan()
         cfg2 = dataclasses.replace(cfg, batch_axes=("data",))
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             st_sh = named_sharding_tree(plan, mesh, state_specs(cfg2, tcfg))
             state2 = init_state(cfg2, tcfg, key)
             state2 = jax.tree.map(jax.device_put, state2, st_sh)
@@ -98,17 +98,16 @@ def test_elastic_checkpoint_reshard():
     code = """
         import jax, jax.numpy as jnp, numpy as np, tempfile
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_mesh
         from repro.train import CheckpointManager
 
-        mesh_a = jax.make_mesh((4,), ("data",),
-                               axis_types=(jax.sharding.AxisType.Auto,))
+        mesh_a = make_mesh((4,), ("data",))
         sh_a = NamedSharding(mesh_a, P("data"))
         state = {"w": jax.device_put(jnp.arange(16.0), sh_a)}
         with tempfile.TemporaryDirectory() as d:
             mgr = CheckpointManager(d)
             mgr.save(5, state, block=True)
-            mesh_b = jax.make_mesh((2, 2), ("x", "y"),
-                                   axis_types=(jax.sharding.AxisType.Auto,)*2)
+            mesh_b = make_mesh((2, 2), ("x", "y"))
             sh_b = {"w": NamedSharding(mesh_b, P(("x", "y")))}
             restored, _, step = mgr.restore(shardings=sh_b)
             assert step == 5
@@ -152,9 +151,9 @@ def test_ring_matmul_emits_permutes_between_dots():
     via -start/-done pairs)."""
     code = """
         import jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
         from repro.sharding import ring_ag_matmul
-        mesh = jax.make_mesh((1, 8), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((1, 8), ("data", "model"))
         x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
         w = jax.ShapeDtypeStruct((64, 32), jnp.float32)
         with mesh:

@@ -1,0 +1,374 @@
+"""Multi-tenant runtime pool: admission, fairness, co-scheduling, cache."""
+
+import pytest
+
+from repro.core import SimMachine, build_paper_graph
+from repro.core.graph import GraphBuilder
+from repro.multitenant import (Job, JobQueue, PlanCache, PoolConfig,
+                               RuntimePool, fairness_index)
+
+
+@pytest.fixture(scope="module")
+def machine():
+    return SimMachine()
+
+
+def _mix_pool(machine, *, max_active=3, priorities=(1.0, 1.0, 2.0, 1.0)):
+    pool = RuntimePool(machine=machine,
+                       config=PoolConfig(max_active=max_active))
+    models = ["resnet50", "dcgan", "resnet50", "dcgan"]
+    for i, (model, prio) in enumerate(zip(models, priorities)):
+        pool.submit(build_paper_graph(model), priority=prio,
+                    name=f"{model}-{i}")
+    return pool
+
+
+# ---------------------------------------------------------------------------
+# JobQueue admission controller
+# ---------------------------------------------------------------------------
+
+class TestJobQueue:
+    def _job(self, jid, *, priority=1.0, submit_time=0.0, demand=1.0):
+        g = GraphBuilder(f"g{jid}")
+        g.add("X", (4, 4), flops=1e6, bytes_moved=1e4)
+        job = Job(jid=jid, name=f"j{jid}", graph=g.build(),
+                  priority=priority, submit_time=submit_time)
+        job.demand = demand
+        return job
+
+    def test_priority_order_fifo_within_level(self):
+        q = JobQueue(max_active=10)
+        a = self._job(0, priority=1.0)
+        b = self._job(1, priority=5.0)
+        c = self._job(2, priority=5.0)
+        for j in (a, b, c):
+            q.submit(j)
+        assert q.pop_admissible([]) is b       # highest priority first
+        assert q.pop_admissible([]) is c       # FIFO within the level
+        assert q.pop_admissible([]) is a
+
+    def test_max_active_gate(self):
+        q = JobQueue(max_active=1)
+        q.submit(self._job(0))
+        active = [self._job(9)]
+        assert q.pop_admissible(active) is None
+        assert q.pop_admissible([]) is not None
+
+    def test_demand_cap_no_overtaking(self):
+        q = JobQueue(max_active=4, max_outstanding_demand=10.0)
+        big = self._job(0, priority=5.0, demand=9.0)
+        small = self._job(1, priority=1.0, demand=1.0)
+        q.submit(big)
+        q.submit(small)
+        active = [self._job(9, demand=5.0)]
+        # big doesn't fit; small must NOT overtake it (strict priority)
+        assert q.pop_admissible(active) is None
+        assert q.pop_admissible([]) is big
+
+    def test_arrival_time_respected(self):
+        q = JobQueue(max_active=4)
+        late = self._job(0, priority=5.0, submit_time=10.0)
+        early = self._job(1, priority=1.0, submit_time=0.0)
+        q.submit(late)
+        q.submit(early)
+        assert q.pop_admissible([], now=0.0) is early
+        assert q.pop_admissible([], now=0.0) is None
+        assert q.next_arrival(0.0) == 10.0
+        assert q.pop_admissible([], now=10.0) is late
+
+
+# ---------------------------------------------------------------------------
+# PoolScheduler invariants
+# ---------------------------------------------------------------------------
+
+class TestPoolScheduler:
+    def test_all_ops_execute_exactly_once(self, machine):
+        pool = _mix_pool(machine)
+        res = pool.run()
+        for job in res.jobs:
+            recs = res.records[job.jid]
+            assert len(recs) == job.graph.n_ops
+            assert len({r.op.uid for r in recs}) == job.graph.n_ops
+            assert job.done
+
+    def test_dependencies_respected_per_job(self, machine):
+        pool = _mix_pool(machine)
+        res = pool.run()
+        for job in res.jobs:
+            start = {r.op.uid: r.start for r in res.records[job.jid]}
+            finish = {r.op.uid: r.finish for r in res.records[job.jid]}
+            for op in job.graph.ops.values():
+                for d in op.deps:
+                    assert finish[d] <= start[op.uid] + 1e-12
+
+    def test_core_capacity_never_exceeded(self, machine):
+        pool = _mix_pool(machine)
+        res = pool.run()
+        recs = [r for rs in res.records.values() for r in rs]
+        times = sorted({r.start for r in recs} | {r.finish for r in recs})
+        for t in times:
+            used = sum(r.threads for r in recs
+                       if not r.hyper and r.start <= t < r.finish)
+            assert used <= machine.spec.cores
+
+    def test_deterministic_under_fixed_seed(self, machine):
+        a = _mix_pool(machine).run()
+        b = _mix_pool(machine).run()
+        assert a.makespan == b.makespan
+        assert a.fairness == b.fairness
+        for jid in a.records:
+            assert ([r.op.uid for r in a.records[jid]]
+                    == [r.op.uid for r in b.records[jid]])
+            assert ([r.start for r in a.records[jid]]
+                    == [r.start for r in b.records[jid]])
+
+    def test_per_job_schedule_events_are_job_local(self, machine):
+        """The per-job events timeline must reflect that job's own
+        concurrency, not the pool-wide co-running level."""
+        pool = _mix_pool(machine)
+        res = pool.run()
+        for job in res.jobs:
+            sched = res.per_job_schedule(job.jid)
+            assert sched.events[-1][1] == 0          # all ops finished
+            peak = max(n for _, n in sched.events)
+            assert peak <= len(sched.records)
+        peaks = [max(n for _, n in res.per_job_schedule(j.jid).events)
+                 for j in res.jobs]
+        assert max(peaks) <= max(n for _, n in res.events)
+
+    def test_empty_graph_job_completes_immediately(self, machine):
+        from repro.core import OpGraph
+        pool = RuntimePool(machine=machine,
+                           config=PoolConfig(max_active=2))
+        empty = pool.submit(OpGraph("empty", {}), name="empty")
+        pool.submit(build_paper_graph("dcgan"), name="real")
+        res = pool.run()                      # must terminate
+        assert empty.done and empty.latency == 0.0
+        assert all(j.done for j in res.jobs)
+
+    def test_enable_s3_off_serializes_launches(self, machine):
+        """Strategies 1-2 only: the pool must not co-run (matching the
+        serial baseline's honoring of the same flag)."""
+        from repro.core import RuntimeConfig
+        pool = RuntimePool(
+            machine=machine,
+            config=PoolConfig(max_active=3,
+                              runtime=RuntimeConfig(enable_s3=False,
+                                                    enable_s4=False)))
+        pool.submit(build_paper_graph("dcgan"), name="a")
+        pool.submit(build_paper_graph("dcgan"), name="b")
+        res = pool.run()
+        assert max(n for _, n in res.events) == 1
+        assert all(j.done for j in res.jobs)
+
+    def test_seed_changes_timings_not_invariants(self):
+        res = _mix_pool(SimMachine(seed=7)).run()
+        for job in res.jobs:
+            assert job.done
+            assert len(res.records[job.jid]) == job.graph.n_ops
+
+
+# ---------------------------------------------------------------------------
+# Fairness / starvation
+# ---------------------------------------------------------------------------
+
+class TestFairness:
+    def test_no_admitted_job_starves(self, machine):
+        res = _mix_pool(machine).run()
+        for job in res.jobs:
+            assert job.done                       # every tenant finishes
+            assert job.service > 0.0              # and got real service
+
+    def test_equal_jobs_get_equal_share(self, machine):
+        pool = RuntimePool(machine=machine,
+                           config=PoolConfig(max_active=4))
+        for i in range(4):
+            pool.submit(build_paper_graph("dcgan"), name=f"dcgan-{i}")
+        res = pool.run()
+        assert res.fairness >= 0.8    # Jain: 1.0 = perfectly proportional
+
+    def test_mixed_mix_fairness_bound(self, machine):
+        res = _mix_pool(machine).run()
+        # heterogeneous sizes/priorities still keep a sane share spread
+        assert res.fairness >= 0.5
+
+    def test_priority_cuts_queueing(self, machine):
+        """With one active slot, the high-priority tenant is admitted
+        before equal-arrival lower-priority ones."""
+        pool = RuntimePool(machine=machine,
+                           config=PoolConfig(max_active=1))
+        lo = [pool.submit(build_paper_graph("dcgan"), priority=1.0,
+                          name=f"lo{i}") for i in range(2)]
+        hi = pool.submit(build_paper_graph("dcgan"), priority=10.0,
+                         name="hi")
+        res = pool.run()
+        assert res is not None
+        assert hi.queue_wait <= min(j.queue_wait for j in lo)
+
+    def test_midrun_arrival_admitted_before_op_completes(self, machine):
+        """A tenant arriving while a long op runs must be admitted at its
+        arrival time (free slot + idle cores), not at the op boundary."""
+        big = GraphBuilder("big")
+        big.add("Huge", (512, 512, 64), flops=5e12, bytes_moved=1e9,
+                working_set=1e9)
+        tiny = GraphBuilder("tiny")
+        tiny.add("Tiny", (8, 8), flops=1e6, bytes_moved=1e4,
+                 working_set=1e4)
+        pool = RuntimePool(machine=machine,
+                           config=PoolConfig(max_active=2))
+        pool.submit(big.build(), name="big", submit_time=0.0)
+        late = pool.submit(tiny.build(), name="late", submit_time=1e-3)
+        res = pool.run()
+        big_op = res.records[0][0]
+        assert late.admit_time == pytest.approx(1e-3)
+        assert late.latency < big_op.duration / 10
+
+    def test_fairness_index_edge_cases(self):
+        assert fairness_index([]) == 1.0
+        g = GraphBuilder("g")
+        g.add("X", (2, 2), flops=1.0, bytes_moved=1.0)
+        j = Job(jid=0, name="j", graph=g.build())
+        j.admit_time = 0.0
+        assert fairness_index([j]) == 1.0     # zero service, single job
+
+
+# ---------------------------------------------------------------------------
+# Pool vs serial regression + PlanCache amortization (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+class TestPoolVsSerial:
+    def test_pool_makespan_not_worse_than_serial(self, machine):
+        pool = _mix_pool(machine)
+        res = pool.run()
+        serial = pool.run_serial()
+        assert res.makespan <= serial.makespan
+        assert res.aggregate_throughput > serial.aggregate_throughput
+
+    def test_single_job_pool_matches_single_runtime_ballpark(self, machine):
+        """A pool of one tenant must not regress the paper scheduler."""
+        pool = RuntimePool(machine=machine, config=PoolConfig(max_active=1))
+        pool.submit(build_paper_graph("resnet50"))
+        res = pool.run()
+        serial = pool.run_serial()
+        assert res.makespan <= serial.makespan * 1.05
+
+    def test_plancache_reduces_probes(self, machine):
+        pool = _mix_pool(machine)
+        res = pool.run()
+        serial = pool.run_serial()     # isolated per-job profiling
+        assert res.cache_stats["probes_spent"] < serial.profiling_probes
+        assert res.cache_stats["probes_saved"] > 0
+        assert res.cache_stats["hits"] > 0
+
+    def test_plancache_no_collision_on_hidden_cost_params(self, machine):
+        """Two tenants with the same (op_class, input_shape) but different
+        analytic cost (cost hidden outside the shape, as the transformer
+        builders do) must NOT share a curve."""
+        cache = PlanCache()
+        pool = RuntimePool(machine=machine, plan_cache=cache,
+                           config=PoolConfig(max_active=2))
+
+        def one_op_graph(flops):
+            b = GraphBuilder("g")
+            b.add("attention", (4, 8, 16, 16), flops=flops,
+                  bytes_moved=1e5, working_set=1e5)
+            return b.build()
+
+        a = pool.submit(one_op_graph(1e9), name="shallow")
+        b = pool.submit(one_op_graph(4e9), name="deep")
+        assert cache.hits == 0                # same shape, different cost
+        assert len(cache.curves) == 2
+        pa = a.plan.per_instance[("attention", (4, 8, 16, 16))]
+        pb = b.plan.per_instance[("attention", (4, 8, 16, 16))]
+        assert pa.predicted_time != pb.predicted_time
+
+    def test_plancache_rejects_different_machine(self, machine):
+        cache = PlanCache()
+        pool_a = RuntimePool(machine=machine, plan_cache=cache)
+        pool_a.submit(build_paper_graph("dcgan"), name="a")
+        other = SimMachine(seed=99)
+        pool_b = RuntimePool(machine=other, plan_cache=cache)
+        with pytest.raises(ValueError, match="different machine"):
+            pool_b.submit(build_paper_graph("dcgan"), name="b")
+
+    def test_plancache_rejects_different_probe_interval(self, machine):
+        from repro.core import RuntimeConfig
+        from repro.core.runtime import ConcurrencyRuntime
+        cache = PlanCache()
+        ConcurrencyRuntime(machine=machine,
+                           config=RuntimeConfig(interval=4),
+                           plan_cache=cache).profile(
+                               build_paper_graph("dcgan"))
+        rt = ConcurrencyRuntime(machine=machine,
+                                config=RuntimeConfig(interval=8),
+                                plan_cache=cache)
+        with pytest.raises(ValueError, match="different machine"):
+            rt.profile(build_paper_graph("dcgan"))
+
+    def test_plancache_identical_jobs_profile_once(self, machine):
+        cache = PlanCache()
+        pool = RuntimePool(machine=machine, plan_cache=cache,
+                           config=PoolConfig(max_active=2))
+        pool.submit(build_paper_graph("dcgan"), name="a")
+        single_job_probes = cache.probes_spent
+        pool.submit(build_paper_graph("dcgan"), name="b")
+        assert cache.probes_spent == single_job_probes   # second job free
+        assert cache.hit_rate > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Serving-wave integration (analytic wave graph, no JAX execution needed)
+# ---------------------------------------------------------------------------
+
+class TestServingWaves:
+    @pytest.fixture(scope="class")
+    def cfg(self):
+        from repro.models.common import ModelConfig
+        return ModelConfig(arch_id="tiny", family="dense", n_layers=2,
+                           d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                           vocab=256)
+
+    def test_wave_graph_shape(self, cfg):
+        import numpy as np
+
+        from repro.serving.engine import Request, wave_op_graph
+        wave = [Request(rid=i, prompt=np.arange(8, dtype=np.int32),
+                        max_new_tokens=4) for i in range(3)]
+        g = wave_op_graph(cfg, wave)
+        g.validate()
+        # embed + 2 ops/layer + (max_new - 1) decode steps (the first
+        # generated token comes from prefill) + unembed
+        assert g.n_ops == 1 + 2 * cfg.n_layers + 3 + 1
+        classes = g.classes()
+        assert "wave_prefill_attn" in classes
+        assert len(classes["wave_decode_step"]) == 3
+
+    def test_wave_costs_use_padded_batch(self, cfg):
+        """The engine runs full n_slots batches even for partial waves —
+        the analytic graph must carry the padded cost."""
+        import numpy as np
+
+        from repro.serving.engine import Request, wave_op_graph
+        wave = [Request(rid=0, prompt=np.arange(8, dtype=np.int32),
+                        max_new_tokens=4)]
+        partial = wave_op_graph(cfg, wave)
+        padded = wave_op_graph(cfg, wave, n_slots=8)
+        assert padded.total_flops() == pytest.approx(
+            8 * partial.total_flops())
+
+    def test_wave_co_schedules_with_training(self, cfg, machine):
+        import numpy as np
+
+        from repro.serving.engine import Request, wave_op_graph
+        wave = [Request(rid=i, prompt=np.arange(8, dtype=np.int32),
+                        max_new_tokens=8) for i in range(4)]
+        pool = RuntimePool(machine=machine,
+                           config=PoolConfig(max_active=2))
+        pool.submit(build_paper_graph("dcgan"), name="train")
+        serve = pool.submit(wave_op_graph(cfg, wave),
+                            priority=4.0, name="serve")
+        res = pool.run()
+        serial = pool.run_serial()
+        assert serve.done
+        # the high-priority wave's latency beats its serial queue position
+        assert serve.latency <= serial.job_latencies[serve.jid]
