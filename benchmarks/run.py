@@ -1,6 +1,30 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+# ``--check-parity`` additionally runs the pool-vs-corun differential on
+# the bench mix models and FAILS the run on any timeline divergence, so
+# perf runs double as strategy-core regression checks.
 import sys
 import traceback
+
+
+def run_parity_check() -> None:
+    """Print one mt/parity/<model> row per bench-mix model; exit nonzero
+    on any timeline divergence (rows are printed BEFORE raising so CI
+    logs always carry the per-model status)."""
+    from benchmarks.multitenant_bench import MIX
+    from repro.multitenant import check_parity
+
+    report = check_parity([m for m, _ in MIX])
+    for model, rec in report["models"].items():
+        status = ("ok" if rec["ok"]
+                  else f"DIVERGED:{rec['divergences'][0]}")
+        print(f"mt/parity/{model},{rec['makespan']*1e6:.1f},{status}")
+    if not report["ok"]:
+        for model, rec in report["models"].items():
+            for d in rec["divergences"][:10]:
+                print(f"# parity divergence [{model}]: {d}",
+                      file=sys.stderr)
+        raise SystemExit("pool-vs-corun parity check FAILED")
 
 
 def main() -> None:
@@ -8,8 +32,12 @@ def main() -> None:
         roofline
     fns = (list(paper_tables.ALL) + list(kernel_bench.ALL)
            + list(roofline.ALL) + list(multitenant_bench.ALL))
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    args = [a for a in sys.argv[1:] if a != "--check-parity"]
+    parity = "--check-parity" in sys.argv[1:]
+    only = args[0] if args else None
     print("name,us_per_call,derived")
+    if parity:
+        run_parity_check()
     for fn in fns:
         if only and only not in fn.__name__:
             continue

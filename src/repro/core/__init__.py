@@ -4,7 +4,9 @@ Faithful pieces (paper SIII):
   graph        -- dataflow op-graph IR the runtime schedules
   perfmodel    -- hill-climbing performance model + regression baseline
   concurrency  -- Strategies 1-2 (per-op parallelism, hysteresis)
-  scheduler    -- Strategies 3-4 (co-run admission, hyper-thread lane)
+  strategy     -- StrategyCore: the S2-clamp/S3-admission/S4-hyper rules,
+                  shared by CorunScheduler and the multitenant pool
+  scheduler    -- single-graph adapter over StrategyCore + baselines
   interference -- co-run slowdown blacklist (SIII-D discussion)
   simmachine   -- deterministic KNL-like cost oracle (see DESIGN.md A4)
   runtime      -- profile->freeze->schedule driver, real-payload executor
@@ -19,6 +21,9 @@ from repro.core.perfmodel import (
     CurveCache, CurveModel, HillClimbProfiler, ProfileStore, RegressionSuite,
     paper_case_lists, power_of_two_cases, REGRESSORS)
 from repro.core.concurrency import ConcurrencyController, ConcurrencyPlan, OpPlan
+from repro.core.strategy import (
+    StrategyAdapter, StrategyConfig, StrategyCore, free_cores,
+    pick_admissible, remaining_horizon)
 from repro.core.scheduler import (
     CorunScheduler, ScheduleResult, ScheduledOp, uniform_schedule,
     manual_best_schedule)
@@ -37,6 +42,8 @@ __all__ = [
     "RegressionSuite",
     "paper_case_lists", "power_of_two_cases", "REGRESSORS",
     "ConcurrencyController", "ConcurrencyPlan", "OpPlan",
+    "StrategyAdapter", "StrategyConfig", "StrategyCore",
+    "free_cores", "pick_admissible", "remaining_horizon",
     "CorunScheduler", "ScheduleResult", "ScheduledOp",
     "uniform_schedule",
     "manual_best_schedule", "InterferenceRecorder",

@@ -46,6 +46,16 @@ class InterferenceRecorder:
     def compatible(self, cls_a: str, running_classes: list[str]) -> bool:
         return not any(self.blacklisted(cls_a, r) for r in running_classes)
 
+    def blacklist(self) -> frozenset[tuple[str, str]]:
+        """Snapshot of currently blacklisted pairs.
+
+        The paper's contract is that recorded interference is avoided "in
+        the future training steps": schedulers freeze this snapshot at the
+        start of a run and enforce it on EVERY launch path, while
+        observations recorded during the run only take effect on the next
+        one (see ``repro.core.strategy.StrategyCore.begin_run``)."""
+        return frozenset(k for k in self._ema if self.blacklisted(*k))
+
     @property
     def observations(self) -> int:
         return sum(self._count.values())

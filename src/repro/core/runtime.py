@@ -30,6 +30,7 @@ from repro.core.perfmodel import (CurveCache, HillClimbProfiler, ProfileStore,
                                   paper_case_lists)
 from repro.core.scheduler import CorunScheduler, ScheduleResult, uniform_schedule
 from repro.core.simmachine import Placement, SimMachine
+from repro.core.strategy import StrategyConfig
 
 
 @dataclasses.dataclass
@@ -42,6 +43,19 @@ class RuntimeConfig:
     strategy2: bool = True
     max_ht_corunners: int = 2
     interference_threshold: float = 1.35
+    min_fallback_cores: int = 4     # run-biggest fallback floor
+    fallback_slack: float = 1.25    # fallback horizon slack
+
+    def strategy_config(self) -> StrategyConfig:
+        """The shared-core view of these knobs (see repro.core.strategy).
+        The multi-tenant PoolConfig builds the same StrategyConfig, so
+        Strategy-3/4 rule parameters cannot drift between schedulers."""
+        return StrategyConfig(
+            enable_s3=self.enable_s3, enable_s4=self.enable_s4,
+            candidates=self.candidates,
+            max_ht_corunners=self.max_ht_corunners,
+            min_fallback_cores=self.min_fallback_cores,
+            fallback_slack=self.fallback_slack)
 
 
 @dataclasses.dataclass
@@ -125,14 +139,17 @@ class ConcurrencyRuntime:
     # ---- phase 2: scheduled steps --------------------------------------
     def scheduler(self) -> CorunScheduler:
         assert self.plan is not None and self.controller is not None
+        cfg = self.config
         return CorunScheduler(
             self.machine, self.controller, self.plan,
             recorder=self.recorder,
-            enable_s3=self.config.enable_s3,
-            enable_s4=self.config.enable_s4,
-            strategy2=self.config.strategy2,
-            max_ht_corunners=self.config.max_ht_corunners,
-            candidates=self.config.candidates)
+            enable_s3=cfg.enable_s3,
+            enable_s4=cfg.enable_s4,
+            strategy2=cfg.strategy2,
+            max_ht_corunners=cfg.max_ht_corunners,
+            candidates=cfg.candidates,
+            min_fallback_cores=cfg.min_fallback_cores,
+            fallback_slack=cfg.fallback_slack)
 
     def execute_step(self, graph: OpGraph) -> ScheduleResult:
         if self.plan is None:

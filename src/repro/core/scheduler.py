@@ -16,6 +16,14 @@
 * Strategy 2 interaction — every launch decision is clamped by
   ``ConcurrencyPlan.clamp`` (deviation > 2 cases falls back to class plan).
 
+The strategy RULES live in ``repro.core.strategy.StrategyCore`` — shared
+verbatim with the multi-tenant ``repro.multitenant.pool.PoolScheduler`` —
+and ``CorunScheduler`` is the single-graph adapter over them: it supplies
+the candidate source (one global ready group), the plan/controller lookup,
+and the event-sim commit.  ``ScheduledOp``/``ScheduleResult`` and the
+admission helpers are defined in ``repro.core.strategy`` and re-exported
+here for compatibility.
+
 Baselines for the paper's Table I / Fig 3 comparisons:
 
 * ``uniform_schedule`` — TensorFlow-style: fixed (inter-op, intra-op)
@@ -25,75 +33,24 @@ Baselines for the paper's Table I / Fig 3 comparisons:
 
 from __future__ import annotations
 
-import dataclasses
 import heapq
 import itertools
 from collections import deque
-from typing import Iterable
+from typing import Mapping, Sequence
 
 from repro.core.concurrency import ConcurrencyPlan, ConcurrencyController, OpPlan
 from repro.core.graph import Op, OpGraph
 from repro.core.interference import InterferenceRecorder
 from repro.core.simmachine import Placement, SimMachine
+from repro.core.strategy import (ScheduledOp, ScheduleResult, StrategyAdapter,
+                                 StrategyConfig, StrategyCore, free_cores,
+                                 pick_admissible, remaining_horizon)
 
-
-@dataclasses.dataclass
-class ScheduledOp:
-    op: Op
-    threads: int
-    variant: bool
-    hyper: bool
-    start: float
-    finish: float
-    predicted: float
-
-    @property
-    def duration(self) -> float:
-        return self.finish - self.start
-
-
-@dataclasses.dataclass
-class ScheduleResult:
-    makespan: float
-    records: list[ScheduledOp]
-    events: list[tuple[float, int]]      # (time, #co-running) — paper Fig 4
-    profiling_probes: int = 0
-
-    @property
-    def mean_corunning(self) -> float:
-        if not self.events:
-            return 0.0
-        return sum(n for _, n in self.events) / len(self.events)
-
-    def per_class_time(self) -> dict[str, float]:
-        out: dict[str, float] = {}
-        for r in self.records:
-            out[r.op.op_class] = out.get(r.op.op_class, 0.0) + r.duration
-        return out
-
-
-def free_cores(running: Iterable[ScheduledOp], total_cores: int) -> int:
-    """Physical cores not occupied by non-hyper-thread runners."""
-    used = sum(r.threads for r in running if not r.hyper)
-    return max(0, total_cores - used)
-
-
-def remaining_horizon(running: Iterable[ScheduledOp], clock: float) -> float:
-    """Longest remaining time among running ops — Strategy 3's throughput
-    guard: a new co-runner must not outlast everything already running."""
-    return max((r.finish - clock for r in running), default=float("inf"))
-
-
-def pick_admissible(cands: list[OpPlan], free: int,
-                    horizon: float) -> OpPlan | None:
-    """Strategy 3's admission rule, shared by the single-graph scheduler
-    and the multi-tenant pool: admissible = fits the idle cores AND won't
-    outlast the running set; among admissible candidates pick the FEWEST
-    threads (the paper deliberately leaves cores free for more
-    co-runners)."""
-    adm = [c for c in cands
-           if c.threads <= free and c.predicted_time <= horizon]
-    return min(adm, key=lambda c: c.threads) if adm else None
+__all__ = [
+    "CorunScheduler", "ScheduledOp", "ScheduleResult", "free_cores",
+    "pick_admissible", "remaining_horizon", "uniform_schedule",
+    "manual_best_schedule",
+]
 
 
 class _EventSim:
@@ -138,174 +95,101 @@ class _EventSim:
         return not self.ready and not self.running
 
 
-class CorunScheduler:
-    def __init__(self, machine: SimMachine, controller: ConcurrencyController,
-                 plan: ConcurrencyPlan, *,
-                 recorder: InterferenceRecorder | None = None,
-                 total_cores: int | None = None,
-                 enable_s3: bool = True, enable_s4: bool = True,
-                 strategy2: bool = True, max_ht_corunners: int = 2,
-                 candidates: int = 3, min_fallback_cores: int = 4):
-        self.machine = machine
+class _GraphAdapter(StrategyAdapter):
+    """Single-graph view for ``StrategyCore``: node keys are op uids, the
+    candidate source is ONE global ready group, and plan lookups resolve
+    against the graph's own frozen plan/controller."""
+
+    def __init__(self, sim: _EventSim, controller: ConcurrencyController,
+                 plan: ConcurrencyPlan, *, strategy2: bool):
+        self.sim = sim
         self.controller = controller
         self.plan = plan
-        self.recorder = recorder if recorder is not None else InterferenceRecorder()
-        self.cores = total_cores or machine.spec.cores
-        self.enable_s3 = enable_s3
-        self.enable_s4 = enable_s4
         self.strategy2 = strategy2
-        self.max_ht = max_ht_corunners
-        self.k = candidates
-        self.min_fallback_cores = min_fallback_cores
-        self.fallback_slack = 1.25
 
-    # ------------------------------------------------------------------
-    def _bw_share(self, threads: int, sim: _EventSim) -> float:
-        # contention policy lives on the machine so every scheduler
-        # (this one, the multi-tenant pool) divides bandwidth identically
-        return self.machine.corun_bw_share(
-            threads, (r.threads for r in sim.running.values()))
+    @property
+    def clock(self) -> float:
+        return self.sim.clock
 
-    def _duration(self, op: Op, plan: OpPlan, hyper: bool,
-                  sim: _EventSim) -> float:
-        pl = Placement(plan.threads, cache_sharing=plan.variant,
-                       hyper_thread=hyper)
-        return self.machine.op_time(op, pl,
-                                    bw_share=self._bw_share(plan.threads, sim))
+    @property
+    def running(self) -> Mapping[int, ScheduledOp]:
+        return self.sim.running
 
-    def _launch(self, sim: _EventSim, uid: int, plan: OpPlan,
-                hyper: bool) -> None:
-        op = sim.graph.ops[uid]
-        dur = self._duration(op, plan, hyper, sim)
-        sched = ScheduledOp(op=op, threads=plan.threads, variant=plan.variant,
-                            hyper=hyper, start=sim.clock,
-                            finish=sim.clock + dur,
-                            predicted=plan.predicted_time)
-        sim.launch(uid, sched)
-        # interference bookkeeping: observed co-run duration vs solo model
-        for other in sim.running.values():
-            if other.op.uid != uid:
-                self.recorder.record(op.op_class, other.op.op_class,
-                                     plan.predicted_time, dur)
+    def ready_groups(self) -> list[Sequence[int]]:
+        return [list(self.sim.ready)]
 
-    def _free_cores(self, sim: _EventSim) -> int:
-        return free_cores(sim.running.values(), self.cores)
+    def op(self, key: int) -> Op:
+        return self.sim.graph.ops[key]
 
-    def _instance_plan(self, op: Op) -> OpPlan:
+    def instance_plan(self, key: int) -> OpPlan:
+        op = self.op(key)
         base = self.plan.plan_for(op, strategy2=self.strategy2)
         # predicted time must be instance-specific: re-predict from curve
         curve = self.controller.store.curve(op)
         return OpPlan(base.threads, base.variant,
                       curve.predict(base.threads, base.variant))
 
-    # ------------------------------------------------------------------
-    def _try_corun(self, sim: _EventSim) -> bool:
-        """Strategy 3: admit one ready op into idle cores. True if launched."""
-        free = self._free_cores(sim)
-        if free <= 0 or not sim.ready:
-            return False
-        running_classes = [r.op.op_class for r in sim.running.values()]
-        horizon = remaining_horizon(sim.running.values(), sim.clock)
-        # examine ready ops, prefer the most expensive first (they gate the
-        # critical path)
-        order = sorted(sim.ready,
-                       key=lambda u: -self._instance_plan(sim.graph.ops[u])
-                       .predicted_time)
-        for uid in order:
-            op = sim.graph.ops[uid]
-            if not self.recorder.compatible(op.op_class, running_classes):
-                continue
-            cands = self.controller.candidates_for(op, self.k)
-            pick = pick_admissible(cands, free, horizon)
-            if pick is None:
-                continue
-            pick = self.plan.clamp(op, pick)
-            if pick.threads > free:
-                continue
-            sim.ready.remove(uid)
-            self._launch(sim, uid, pick, hyper=False)
-            return True
-        return False
+    def candidates_for(self, key: int, k: int) -> list[OpPlan]:
+        return self.controller.candidates_for(self.op(key), k)
 
-    def _run_biggest(self, sim: _EventSim) -> bool:
-        """Fallback: most time-consuming ready op at its frozen plan.
+    def clamp(self, key: int, proposal: OpPlan) -> OpPlan:
+        return self.plan.clamp(self.op(key), proposal)
 
-        When other ops are running, the clamped-to-idle-cores launch must
-        still respect the throughput guard (with a little slack for
-        contention): squeezing a big op into a few leftover cores makes it
-        outlast everything and hurts throughput — better to wait."""
-        if not sim.ready:
-            return False
-        free = self._free_cores(sim)
-        if free <= 0 or (sim.running and free < self.min_fallback_cores):
-            return False
-        uid = max(sim.ready, key=lambda u: self._instance_plan(
-            sim.graph.ops[u]).predicted_time)
-        op = sim.graph.ops[uid]
-        plan = self._instance_plan(op)
-        if plan.threads > free:
-            plan = OpPlan(free, plan.variant,
-                          self.controller.store.curve(op).predict(
-                              free, plan.variant))
-        if sim.running:
-            horizon = remaining_horizon(sim.running.values(), sim.clock)
-            if plan.predicted_time > horizon * self.fallback_slack:
-                return False
-        sim.ready.remove(uid)
-        self._launch(sim, uid, plan, hyper=False)
-        return True
+    def predict(self, key: int, threads: int, variant: bool) -> float:
+        return self.controller.store.curve(self.op(key)).predict(
+            threads, variant)
 
-    def _try_hyper(self, sim: _EventSim) -> bool:
-        """Strategy 4: free physical cores exhausted — run the smallest
-        ready ops on the hyper-thread lane."""
-        if not self.enable_s4 or not sim.ready:
-            return False
-        if self._free_cores(sim) > 0:
-            return False
-        ht_running = sum(1 for r in sim.running.values() if r.hyper)
-        if ht_running >= self.max_ht:
-            return False
-        running_classes = [r.op.op_class for r in sim.running.values()]
-        # smallest = shortest serial-execution time (threads=1 prediction)
-        def serial_time(u: int) -> float:
-            op = sim.graph.ops[u]
-            return self.controller.store.curve(op).predict(1, False)
-        order = sorted(sim.ready, key=serial_time)
-        for uid in order:
-            op = sim.graph.ops[uid]
-            if not self.recorder.compatible(op.op_class, running_classes):
-                continue
-            inst = self._instance_plan(op)
-            plan = OpPlan(min(inst.threads, self.cores), inst.variant,
-                          inst.predicted_time)
-            sim.ready.remove(uid)
-            self._launch(sim, uid, plan, hyper=True)
-            return True
-        return False
+    def commit(self, key: int, sched: ScheduledOp) -> None:
+        self.sim.ready.remove(key)
+        self.sim.launch(key, sched)
+
+
+class CorunScheduler:
+    """Thin single-graph adapter over ``StrategyCore``."""
+
+    def __init__(self, machine: SimMachine, controller: ConcurrencyController,
+                 plan: ConcurrencyPlan, *,
+                 recorder: InterferenceRecorder | None = None,
+                 total_cores: int | None = None,
+                 enable_s3: bool = True, enable_s4: bool = True,
+                 strategy2: bool = True, max_ht_corunners: int = 2,
+                 candidates: int = 3, min_fallback_cores: int = 4,
+                 fallback_slack: float = 1.25):
+        self.machine = machine
+        self.controller = controller
+        self.plan = plan
+        self.strategy2 = strategy2
+        self.core = StrategyCore(
+            machine,
+            StrategyConfig(enable_s3=enable_s3, enable_s4=enable_s4,
+                           candidates=candidates,
+                           max_ht_corunners=max_ht_corunners,
+                           min_fallback_cores=min_fallback_cores,
+                           fallback_slack=fallback_slack),
+            recorder=recorder, total_cores=total_cores)
+
+    @property
+    def recorder(self) -> InterferenceRecorder:
+        return self.core.recorder
+
+    @property
+    def cores(self) -> int:
+        return self.core.cores
+
+    def adapter(self, sim: _EventSim) -> _GraphAdapter:
+        return _GraphAdapter(sim, self.controller, self.plan,
+                             strategy2=self.strategy2)
 
     # ------------------------------------------------------------------
     def run(self, graph: OpGraph) -> ScheduleResult:
         sim = _EventSim(graph)
+        adapter = self.adapter(sim)
+        # freeze the interference blacklist for this step; observations
+        # recorded now take effect on the NEXT run (paper §III-D: avoid
+        # recorded pairs "in the future training steps")
+        self.core.begin_run()
         while not sim.done:
-            launched = True
-            while launched:
-                launched = False
-                if self.enable_s3:
-                    if sim.running:
-                        launched = self._try_corun(sim)
-                        if not launched:
-                            # paper fallback: no candidate fits without
-                            # decreasing throughput -> run the most
-                            # time-consuming ready op in the idle cores
-                            launched = self._run_biggest(sim)
-                    else:
-                        launched = self._run_biggest(sim)
-                elif not sim.running:
-                    # Strategies 1-2 only: serial execution with per-op
-                    # tuned concurrency (the paper's Fig 3.a configuration)
-                    launched = self._run_biggest(sim)
-                if not launched:
-                    launched = self._try_hyper(sim)
+            self.core.drain(adapter)
             if sim.running:
                 sim.complete_next()
         return ScheduleResult(makespan=sim.clock, records=sim.records,

@@ -1,0 +1,382 @@
+"""Shared strategy core — Strategies 2-4 in ONE place (paper §III-D).
+
+The paper's co-run decision rules used to exist twice: once in
+``repro.core.scheduler.CorunScheduler`` (one step graph) and once in
+``repro.multitenant.pool.PoolScheduler`` (many tenant graphs), differing
+only in job plumbing — a drift hazard the ROADMAP flagged explicitly.
+``StrategyCore`` owns the rules once:
+
+* **Strategy 3 admission fixpoint** — ``try_corun`` admits a ready op into
+  idle cores when a top-k candidate fits AND won't outlast the running set
+  (``free_cores`` / ``remaining_horizon`` / ``pick_admissible``), with the
+  ``run_biggest`` fallback (most time-consuming ready op at its frozen
+  plan, throughput-guarded when others run);
+* **Strategy 4** — ``try_hyper`` runs the smallest ready ops on the
+  hyper-thread lane once physical cores are exhausted;
+* **Strategy 2 interaction** — every S3 proposal passes through the
+  adapter's ``clamp`` (per-class hysteresis guard);
+* the **launch drain loop** (``drain``) that fixpoints S3/fallback/S4 at
+  one scheduling instant, including the S3-off serial gating.
+
+What *varies* between the single-graph scheduler and the multi-tenant pool
+is injected through ``StrategyAdapter``:
+
+* **candidate source** — ``ready_groups()`` yields ordered groups of ready
+  node keys (one global group for a single graph; one group per tenant,
+  ordered by weighted fair share, for the pool);
+* **plan/controller lookup** — ``instance_plan`` / ``candidates_for`` /
+  ``clamp`` / ``predict`` resolve against the node's own job's frozen plan;
+* **bandwidth-share policy** — ``StrategyCore(bw_share=...)``, defaulting
+  to the machine's ``corun_bw_share`` contention rule;
+* **interference blacklist** — the injected ``InterferenceRecorder`` spans
+  whatever co-runs: within one graph or across tenants;
+* **accounting** — ``charge`` (weighted-fair-share service for the pool,
+  a no-op for a single graph).
+
+Node keys are opaque to the core (``int`` uid for a single graph,
+``(jid, uid)`` for the pool).  Because both schedulers execute the same
+core, a single-job pool reproduces the single-graph scheduler's timeline
+bit-for-bit — locked down by ``tests/test_strategy_differential.py``.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Callable, Hashable, Iterable, Mapping, Sequence
+
+from repro.core.concurrency import OpPlan
+from repro.core.graph import Op
+from repro.core.interference import InterferenceRecorder, _pair_key
+from repro.core.simmachine import Placement, SimMachine
+
+NodeKey = Hashable            # int (uid) or (jid, uid) — opaque to the core
+
+
+@dataclasses.dataclass
+class ScheduledOp:
+    op: Op
+    threads: int
+    variant: bool
+    hyper: bool
+    start: float
+    finish: float
+    predicted: float
+
+    @property
+    def duration(self) -> float:
+        return self.finish - self.start
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    makespan: float
+    records: list[ScheduledOp]
+    events: list[tuple[float, int]]      # (time, #co-running) — paper Fig 4
+    profiling_probes: int = 0
+
+    @property
+    def mean_corunning(self) -> float:
+        if not self.events:
+            return 0.0
+        return sum(n for _, n in self.events) / len(self.events)
+
+    def per_class_time(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for r in self.records:
+            out[r.op.op_class] = out.get(r.op.op_class, 0.0) + r.duration
+        return out
+
+
+def free_cores(running: Iterable[ScheduledOp], total_cores: int) -> int:
+    """Physical cores not occupied by non-hyper-thread runners."""
+    used = sum(r.threads for r in running if not r.hyper)
+    return max(0, total_cores - used)
+
+
+def remaining_horizon(running: Iterable[ScheduledOp], clock: float) -> float:
+    """Longest remaining time among running ops — Strategy 3's throughput
+    guard: a new co-runner must not outlast everything already running."""
+    return max((r.finish - clock for r in running), default=float("inf"))
+
+
+def pick_admissible(cands: list[OpPlan], free: int,
+                    horizon: float) -> OpPlan | None:
+    """Strategy 3's admission rule: admissible = fits the idle cores AND
+    won't outlast the running set; among admissible candidates pick the
+    FEWEST threads (the paper deliberately leaves cores free for more
+    co-runners)."""
+    adm = [c for c in cands
+           if c.threads <= free and c.predicted_time <= horizon]
+    return min(adm, key=lambda c: c.threads) if adm else None
+
+
+@dataclasses.dataclass(frozen=True)
+class StrategyConfig:
+    """The strategy knobs shared by every scheduler built on the core."""
+
+    enable_s3: bool = True
+    enable_s4: bool = True
+    candidates: int = 3              # Strategy 3 top-k
+    max_ht_corunners: int = 2        # Strategy 4 hyper-thread lane width
+    min_fallback_cores: int = 4      # don't squeeze the fallback op
+    fallback_slack: float = 1.25     # horizon slack for the fallback launch
+
+
+class StrategyAdapter(abc.ABC):
+    """The seam a scheduler implements to drive ``StrategyCore``.
+
+    An adapter is a *view* over one scheduler's discrete-event state plus
+    its plan/controller lookups; the core never touches sims or jobs
+    directly.  ``repro.core.scheduler`` adapts one ``_EventSim``;
+    ``repro.multitenant.pool`` adapts a ``_PoolSim`` with job-aware
+    lookups and fair-share ordering."""
+
+    # ---- sim view -----------------------------------------------------
+    @property
+    @abc.abstractmethod
+    def clock(self) -> float: ...
+
+    @property
+    @abc.abstractmethod
+    def running(self) -> Mapping[NodeKey, ScheduledOp]: ...
+
+    @abc.abstractmethod
+    def ready_groups(self) -> list[Sequence[NodeKey]]:
+        """Ordered candidate groups of ready node keys.  The core tries
+        groups in order (pool: most-owed tenant first) and, inside a
+        group, orders ops itself per strategy.  Group order is the
+        injected scheduling POLICY (fair share); in-group rule is the
+        paper's MECHANISM."""
+
+    @abc.abstractmethod
+    def op(self, key: NodeKey) -> Op: ...
+
+    # ---- plan / controller lookup --------------------------------------
+    @abc.abstractmethod
+    def instance_plan(self, key: NodeKey) -> OpPlan:
+        """The node's frozen S1/S2 plan with an instance-specific
+        predicted time (re-predicted from the node's own curve)."""
+
+    @abc.abstractmethod
+    def candidates_for(self, key: NodeKey, k: int) -> list[OpPlan]:
+        """Strategy 3's top-k candidate configurations for the node."""
+
+    @abc.abstractmethod
+    def clamp(self, key: NodeKey, proposal: OpPlan) -> OpPlan:
+        """Strategy 2 hysteresis guard over an S3 proposal."""
+
+    @abc.abstractmethod
+    def predict(self, key: NodeKey, threads: int, variant: bool) -> float:
+        """Curve prediction for an arbitrary thread count (fallback clamp
+        to idle cores)."""
+
+    def serial_time(self, key: NodeKey) -> float:
+        """Strategy 4's 'smallest op' metric: serial-execution time."""
+        return self.predict(key, 1, False)
+
+    # ---- commit --------------------------------------------------------
+    @abc.abstractmethod
+    def commit(self, key: NodeKey, sched: ScheduledOp) -> None:
+        """Remove the node from the ready frontier and register the launch
+        with the event sim."""
+
+    def charge(self, key: NodeKey, sched: ScheduledOp) -> None:
+        """Post-launch accounting hook (pool: weighted fair share)."""
+
+
+class StrategyCore:
+    """Strategies 2-4 over any ``StrategyAdapter``.
+
+    ``bw_share`` is the injected contention policy ``(threads,
+    co_running_threads) -> share``; it defaults to the machine's
+    ``corun_bw_share`` so every scheduler divides MCDRAM identically.
+    """
+
+    def __init__(self, machine: SimMachine,
+                 config: StrategyConfig | None = None, *,
+                 recorder: InterferenceRecorder | None = None,
+                 total_cores: int | None = None,
+                 bw_share: Callable[[int, Iterable[int]], float] | None = None):
+        self.machine = machine
+        self.config = config or StrategyConfig()
+        self.recorder = (recorder if recorder is not None
+                         else InterferenceRecorder())
+        self.cores = total_cores or machine.spec.cores
+        self.bw_share = bw_share or machine.corun_bw_share
+        self._blacklist: frozenset[tuple[str, str]] | None = None
+
+    # ------------------------------------------------------------------
+    def begin_run(self) -> None:
+        """Freeze the interference blacklist for one scheduling run.
+
+        The paper avoids recorded-interference pairs "in the future
+        training steps": the snapshot taken here is what every launch
+        path of THIS run enforces, while observations recorded during the
+        run accumulate in the recorder and only bite on the next
+        ``begin_run``.  Live-consulting the recorder instead would let
+        ordinary modeled contention (every co-run observation exceeds the
+        solo prediction by construction) serialize the machine mid-run."""
+        self._blacklist = self.recorder.blacklist()
+
+    def _compatible(self, op_class: str, running_classes: list[str]) -> bool:
+        if self._blacklist is None:        # no snapshot: live recorder view
+            return self.recorder.compatible(op_class, running_classes)
+        return not any(_pair_key(op_class, r) in self._blacklist
+                       for r in running_classes)
+
+    def free(self, adapter: StrategyAdapter) -> int:
+        return free_cores(adapter.running.values(), self.cores)
+
+    def _duration(self, op: Op, plan: OpPlan, hyper: bool,
+                  adapter: StrategyAdapter) -> float:
+        pl = Placement(plan.threads, cache_sharing=plan.variant,
+                       hyper_thread=hyper)
+        share = self.bw_share(
+            plan.threads, (r.threads for r in adapter.running.values()))
+        return self.machine.op_time(op, pl, bw_share=share)
+
+    def launch(self, adapter: StrategyAdapter, key: NodeKey, plan: OpPlan,
+               hyper: bool) -> ScheduledOp:
+        op = adapter.op(key)
+        dur = self._duration(op, plan, hyper, adapter)
+        sched = ScheduledOp(op=op, threads=plan.threads, variant=plan.variant,
+                            hyper=hyper, start=adapter.clock,
+                            finish=adapter.clock + dur,
+                            predicted=plan.predicted_time)
+        # interference bookkeeping: observed co-run duration vs solo model,
+        # keyed by class pair (the machine doesn't care who launched what)
+        for other in adapter.running.values():
+            self.recorder.record(op.op_class, other.op.op_class,
+                                 plan.predicted_time, dur)
+        adapter.commit(key, sched)
+        adapter.charge(key, sched)
+        return sched
+
+    # ---- Strategy 3 ----------------------------------------------------
+    def try_corun(self, adapter: StrategyAdapter) -> bool:
+        """Admit one ready op into idle cores.  True if launched."""
+        free = self.free(adapter)
+        if free <= 0:
+            return False
+        running = adapter.running
+        running_classes = [r.op.op_class for r in running.values()]
+        horizon = remaining_horizon(running.values(), adapter.clock)
+        for group in adapter.ready_groups():
+            # examine ready ops, most expensive first (they gate the
+            # critical path)
+            order = sorted(
+                group,
+                key=lambda k: -adapter.instance_plan(k).predicted_time)
+            for key in order:
+                op = adapter.op(key)
+                if not self._compatible(op.op_class, running_classes):
+                    continue
+                cands = adapter.candidates_for(key, self.config.candidates)
+                pick = pick_admissible(cands, free, horizon)
+                if pick is None:
+                    continue
+                pick = adapter.clamp(key, pick)
+                if pick.threads > free:
+                    continue
+                self.launch(adapter, key, pick, hyper=False)
+                return True
+        return False
+
+    # ---- fallback ------------------------------------------------------
+    def run_biggest(self, adapter: StrategyAdapter) -> bool:
+        """Fallback: most time-consuming ready op at its frozen plan.
+
+        When other ops are running, the clamped-to-idle-cores launch must
+        still respect the throughput guard (with a little slack for
+        contention): squeezing a big op into a few leftover cores makes it
+        outlast everything and hurts throughput — better to wait.  With
+        several groups (pool tenants), a later group's op may still fit
+        when the most-owed group's biggest would outlast the running set —
+        don't idle the cores over it.
+
+        The fallback launches NEXT TO running ops, so it must honor the
+        interference blacklist like every other launch path — this used to
+        be the forked schedulers' silent gap: only ``try_corun`` and
+        ``try_hyper`` checked compatibility, letting a blacklisted pair
+        co-launch through the fallback."""
+        free = self.free(adapter)
+        if free <= 0:
+            return False
+        running = adapter.running
+        if running and free < self.config.min_fallback_cores:
+            return False
+        running_classes = [r.op.op_class for r in running.values()]
+        horizon = (remaining_horizon(running.values(), adapter.clock)
+                   if running else float("inf"))
+        for group in adapter.ready_groups():
+            cand = [k for k in group if self._compatible(
+                adapter.op(k).op_class, running_classes)]
+            if not cand:
+                continue
+            key = max(cand,
+                      key=lambda k: adapter.instance_plan(k).predicted_time)
+            plan = adapter.instance_plan(key)
+            if plan.threads > free:
+                plan = OpPlan(free, plan.variant,
+                              adapter.predict(key, free, plan.variant))
+            if plan.predicted_time > horizon * self.config.fallback_slack:
+                continue
+            self.launch(adapter, key, plan, hyper=False)
+            return True
+        return False
+
+    # ---- Strategy 4 ----------------------------------------------------
+    def try_hyper(self, adapter: StrategyAdapter) -> bool:
+        """Free physical cores exhausted — run the smallest ready ops on
+        the hyper-thread lane."""
+        if not self.config.enable_s4:
+            return False
+        if self.free(adapter) > 0:
+            return False
+        running = adapter.running
+        if sum(1 for r in running.values()
+               if r.hyper) >= self.config.max_ht_corunners:
+            return False
+        running_classes = [r.op.op_class for r in running.values()]
+        # smallest = shortest serial-execution time; ties resolve by group
+        # order (fair share), then readiness order within the group
+        keyed = [(adapter.serial_time(k), gi, i, k)
+                 for gi, group in enumerate(adapter.ready_groups())
+                 for i, k in enumerate(group)]
+        for _, _, _, key in sorted(keyed, key=lambda t: t[:3]):
+            op = adapter.op(key)
+            if not self._compatible(op.op_class, running_classes):
+                continue
+            inst = adapter.instance_plan(key)
+            plan = OpPlan(min(inst.threads, self.cores), inst.variant,
+                          inst.predicted_time)
+            self.launch(adapter, key, plan, hyper=True)
+            return True
+        return False
+
+    # ---- the launch fixpoint loop --------------------------------------
+    def drain(self, adapter: StrategyAdapter) -> None:
+        """Launch everything launchable at this scheduling instant.
+
+        S3 on: co-run admission with the run-biggest fallback.  S3 off:
+        serial execution with per-op tuned concurrency only (Strategies
+        1-2, the paper's Fig 3.a configuration).  S4 tops up the
+        hyper-thread lane either way."""
+        launched = True
+        while launched:
+            launched = False
+            if self.config.enable_s3:
+                if adapter.running:
+                    launched = self.try_corun(adapter)
+                    if not launched:
+                        # paper fallback: no candidate fits without
+                        # decreasing throughput -> run the most
+                        # time-consuming ready op in the idle cores
+                        launched = self.run_biggest(adapter)
+                else:
+                    launched = self.run_biggest(adapter)
+            elif not adapter.running:
+                launched = self.run_biggest(adapter)
+            if not launched:
+                launched = self.try_hyper(adapter)

@@ -27,6 +27,10 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scale", type=int, default=1,
                     help="layer-count multiplier for every job graph")
+    ap.add_argument("--check-parity", action="store_true",
+                    help="preflight: verify a single-job pool reproduces "
+                         "the single-graph scheduler bit-for-bit on this "
+                         "tenant mix's models (fails fast on divergence)")
     args = ap.parse_args()
 
     models = [m.strip() for m in args.jobs.split(",") if m.strip()]
@@ -36,6 +40,17 @@ def main() -> None:
              if args.priorities else [1.0] * len(models))
     if len(prios) != len(models):
         raise SystemExit("--priorities length must match --jobs")
+
+    parity = None
+    if args.check_parity:
+        from repro.multitenant import check_parity
+        report = check_parity(models, seed=args.seed, scale=args.scale)
+        if not report["ok"]:
+            for model, rec in report["models"].items():
+                for d in rec["divergences"][:10]:
+                    print(f"parity divergence [{model}]: {d}")
+            raise SystemExit("pool-vs-corun parity check FAILED")
+        parity = {m: rec["ok"] for m, rec in report["models"].items()}
 
     pool = RuntimePool(machine=SimMachine(seed=args.seed),
                        config=PoolConfig(max_active=args.max_active))
@@ -66,6 +81,7 @@ def main() -> None:
             serial.job_makespans),
         "plan_cache": res.cache_stats,
         "serial_profiling_probes": serial.profiling_probes,
+        **({"parity_check": parity} if parity is not None else {}),
     }, indent=1))
 
 

@@ -7,12 +7,18 @@ Layers (each builds on ``repro.core``, none of core depends back):
   plancache  -- cross-job curve cache (keyed by the op's full analytic
                 profile) so one tenant's profiling probes amortize over
                 every tenant
-  pool       -- PoolScheduler (Strategies 3/4 over a multi-job frontier,
-                job-aware Strategy-2 clamp, cross-job interference
-                blacklist) + RuntimePool driver and serial baseline
+  pool       -- PoolScheduler: thin multi-job adapter over the shared
+                ``repro.core.strategy.StrategyCore`` (job-aware Strategy-2
+                clamp, cross-job interference blacklist, weighted fair
+                share) + RuntimePool driver and serial baseline
+  parity     -- differential check that a single-job pool reproduces
+                CorunScheduler timelines bit-for-bit
 """
 
 from repro.multitenant.job import Job, JobQueue, fairness_index
+from repro.multitenant.parity import (check_parity, compare_timelines,
+                                      corun_timeline, pool_timeline,
+                                      timeline_rows)
 from repro.multitenant.plancache import PlanCache
 from repro.multitenant.pool import (PoolConfig, PoolResult, PoolScheduler,
                                     RuntimePool, SerialResult)
@@ -22,4 +28,6 @@ __all__ = [
     "PlanCache",
     "PoolConfig", "PoolResult", "PoolScheduler", "RuntimePool",
     "SerialResult",
+    "check_parity", "compare_timelines", "corun_timeline", "pool_timeline",
+    "timeline_rows",
 ]

@@ -1,0 +1,110 @@
+"""Differential parity: a single-job pool must reproduce CorunScheduler.
+
+Both schedulers are thin adapters over ``repro.core.strategy.StrategyCore``
+(since the extraction), so a pool containing exactly one job must produce
+a BIT-IDENTICAL ``ScheduleResult`` timeline — same makespan, same per-op
+launch times, thread counts, affinity variants, and hyper-thread flags —
+as the single-graph scheduler run on the same machine.  This module is the
+executable form of that claim, shared by three consumers:
+
+* ``tests/test_strategy_differential.py`` — the differential suite over
+  the model zoo plus committed golden timelines;
+* ``benchmarks/run.py --check-parity`` — perf runs double as regression
+  checks on the bench mix;
+* ``python -m repro.launch.pool --check-parity`` — CLI preflight.
+
+Divergence reports name the first mismatching record field-by-field so a
+strategy-rule drift between the adapters is diagnosable from CI output
+alone.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable
+
+from repro.core.graph import OpGraph, build_paper_graph
+from repro.core.runtime import ConcurrencyRuntime, RuntimeConfig
+from repro.core.simmachine import SimMachine
+from repro.core.strategy import ScheduleResult
+from repro.multitenant.pool import PoolConfig, RuntimePool
+
+# the fields of one timeline row, in report order
+_ROW_FIELDS = ("uid", "op_class", "threads", "variant", "hyper",
+               "start", "finish", "predicted")
+
+
+def corun_timeline(graph: OpGraph, machine: SimMachine | None = None,
+                   config: RuntimeConfig | None = None) -> ScheduleResult:
+    """Profile + schedule one graph with the single-graph scheduler."""
+    rt = ConcurrencyRuntime(machine=machine or SimMachine(), config=config)
+    rt.profile(graph)
+    return rt.execute_step(graph)
+
+
+def pool_timeline(graph: OpGraph, machine: SimMachine | None = None,
+                  config: RuntimeConfig | None = None) -> ScheduleResult:
+    """The same graph as the ONLY tenant of a RuntimePool."""
+    pool = RuntimePool(machine=machine or SimMachine(),
+                       config=PoolConfig(max_active=1,
+                                         runtime=config or RuntimeConfig()))
+    job = pool.submit(graph)
+    res = pool.run()
+    return res.per_job_schedule(job.jid)
+
+
+def timeline_rows(result: ScheduleResult) -> list[dict]:
+    """JSON-serializable per-op launch records (golden-fixture format).
+
+    Floats are kept at full precision — ``json`` round-trips Python floats
+    exactly — so fixture comparisons are bit-exact, not approximate."""
+    return [{"uid": r.op.uid, "op_class": r.op.op_class,
+             "threads": r.threads, "variant": r.variant, "hyper": r.hyper,
+             "start": r.start, "finish": r.finish, "predicted": r.predicted}
+            for r in result.records]
+
+
+def compare_timelines(a: list[dict], b: list[dict], *,
+                      label_a: str = "corun",
+                      label_b: str = "pool") -> list[str]:
+    """Field-by-field divergences between two timelines (empty = parity)."""
+    divergences: list[str] = []
+    if len(a) != len(b):
+        divergences.append(
+            f"record count: {label_a}={len(a)} {label_b}={len(b)}")
+    for i, (ra, rb) in enumerate(zip(a, b)):
+        for f in _ROW_FIELDS:
+            if ra.get(f) != rb.get(f):
+                divergences.append(
+                    f"record {i} field {f!r}: {label_a}={ra.get(f)!r} "
+                    f"{label_b}={rb.get(f)!r}")
+    return divergences
+
+
+def check_parity(models: Iterable[str] = ("resnet50", "dcgan"), *,
+                 seed: int = 0, scale: int = 1,
+                 config: RuntimeConfig | None = None) -> dict:
+    """Pool-vs-corun parity over paper-zoo models.
+
+    Returns ``{"ok": bool, "models": {name: {"ok", "makespan",
+    "divergences"}}}``.  Uses two equal-seeded machines (the sim machine
+    is a deterministic function of its seed, so equal seeds mean an
+    identical timing function).  ``scale``/``config`` must match the run
+    being vouched for — parity on a scale-1 graph says nothing about a
+    divergence only reachable with a larger ready frontier."""
+    report: dict = {"ok": True, "models": {}}
+    for model in dict.fromkeys(models):        # dedupe, keep order
+        graph = build_paper_graph(model, scale=scale)
+        single = corun_timeline(graph, SimMachine(seed=seed), config)
+        pooled = pool_timeline(graph, SimMachine(seed=seed), config)
+        divs = compare_timelines(timeline_rows(single), timeline_rows(pooled))
+        if single.makespan != pooled.makespan:
+            divs.insert(0, f"makespan: corun={single.makespan!r} "
+                           f"pool={pooled.makespan!r}")
+        report["models"][model] = {
+            "ok": not divs,
+            "makespan": single.makespan,
+            "divergences": divs,
+        }
+        if divs:
+            report["ok"] = False
+    return report

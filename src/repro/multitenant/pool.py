@@ -1,12 +1,18 @@
 """Runtime pool: co-schedule many op graphs on one simulated machine.
 
-This generalizes ``repro.core.scheduler.CorunScheduler`` from *one step
-graph* to *many tenants*: the paper's Strategy-3 candidate selection draws
-ready ops from every admitted job's frontier, the Strategy-2 clamp applies
+This generalizes the paper's runtime from *one step graph* to *many
+tenants*.  The Strategy-2/3/4 decision RULES are not re-implemented here:
+they live once in ``repro.core.strategy.StrategyCore`` (shared with the
+single-graph ``CorunScheduler``), and ``PoolScheduler`` is the multi-job
+adapter over them — its ``_PoolAdapter`` injects the job-aware pieces:
+the candidate source draws ready ops from every admitted job's frontier
+(tenants ordered by weighted fair share), the Strategy-2 clamp applies
 each op's **own job's** frozen plan, Strategy 4's hyper-thread lane picks
 the globally smallest ready op, and the interference blacklist spans
 co-runners from different jobs (a class pair that thrashes MCDRAM thrashes
-it regardless of which tenant launched each side).
+it regardless of which tenant launched each side).  A single-job pool
+therefore reproduces ``CorunScheduler`` timelines exactly — enforced by
+``repro.multitenant.parity`` and ``tests/test_strategy_differential.py``.
 
 Cross-job decisions need a currency; following value-function schedulers
 (Steiner et al.) we use the ``perfmodel`` predictions already frozen in
@@ -29,14 +35,15 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+from typing import Mapping, Sequence
 
 from repro.core.concurrency import OpPlan
 from repro.core.graph import Op, OpGraph
 from repro.core.interference import InterferenceRecorder
 from repro.core.runtime import ConcurrencyRuntime, RuntimeConfig
-from repro.core.scheduler import (ScheduledOp, ScheduleResult, free_cores,
-                                  pick_admissible, remaining_horizon)
-from repro.core.simmachine import Placement, SimMachine
+from repro.core.simmachine import SimMachine
+from repro.core.strategy import (ScheduledOp, ScheduleResult, StrategyAdapter,
+                                 StrategyConfig, StrategyCore)
 from repro.multitenant.job import Job, JobQueue, fairness_index, jain
 from repro.multitenant.plancache import PlanCache
 
@@ -51,9 +58,23 @@ class PoolConfig:
 
     max_active: int = 3             # admission: concurrent tenants
     max_outstanding_demand: float | None = None   # admission: core-seconds
-    min_fallback_cores: int = 4
-    fallback_slack: float = 1.25
+    # fallback knobs live on RuntimeConfig (the one authoritative home,
+    # shared with the single-graph scheduler); set these only to give the
+    # POOL a deliberately different fallback policy
+    min_fallback_cores: int | None = None
+    fallback_slack: float | None = None
     runtime: RuntimeConfig = dataclasses.field(default_factory=RuntimeConfig)
+
+    def strategy_config(self) -> StrategyConfig:
+        """Same StrategyConfig RuntimeConfig.strategy_config builds —
+        one shared core, one knob set, no drift: a single-job pool stays
+        bit-identical to CorunScheduler for ANY RuntimeConfig.  Pool-level
+        overrides apply only when explicitly set."""
+        cfg = self.runtime.strategy_config()
+        overrides = {k: v for k, v in (
+            ("min_fallback_cores", self.min_fallback_cores),
+            ("fallback_slack", self.fallback_slack)) if v is not None}
+        return dataclasses.replace(cfg, **overrides) if overrides else cfg
 
 
 class _PoolSim:
@@ -66,6 +87,7 @@ class _PoolSim:
     def __init__(self) -> None:
         self.clock = 0.0
         self.graphs: dict[int, OpGraph] = {}
+        self.jobs: dict[int, Job] = {}              # jid -> admitted job
         self.pending: dict[int, dict[int, int]] = {}
         self.ready: dict[int, list[int]] = {}       # jid -> ready uids
         self.heap: list[tuple[float, int, NodeKey]] = []
@@ -77,6 +99,7 @@ class _PoolSim:
     def admit(self, job: Job) -> None:
         g = job.graph
         self.graphs[job.jid] = g
+        self.jobs[job.jid] = job
         self.pending[job.jid] = {u: len(op.deps) for u, op in g.ops.items()}
         self.ready[job.jid] = sorted(g.sources())
         self.records[job.jid] = []
@@ -169,146 +192,111 @@ class PoolResult:
             records=recs, events=events)
 
 
+class _PoolAdapter(StrategyAdapter):
+    """Multi-job view for ``StrategyCore``: node keys are ``(jid, uid)``,
+    the candidate source yields one ready group per admitted job —
+    most-owed tenant first (weighted fair share) — and every plan lookup
+    resolves against the node's OWN job's frozen plan/controller (the
+    job-aware Strategy-2 clamp).  ``charge`` implements launch-time
+    fair-share accounting; hyper-thread launches are charged at the
+    machine's hyper-thread efficiency (they borrow spare lanes, not whole
+    cores)."""
+
+    def __init__(self, sim: _PoolSim, machine: SimMachine, *,
+                 strategy2: bool):
+        self.sim = sim
+        self.machine = machine
+        self.strategy2 = strategy2
+
+    @property
+    def clock(self) -> float:
+        return self.sim.clock
+
+    @property
+    def running(self) -> Mapping[NodeKey, ScheduledOp]:
+        return self.sim.running
+
+    def _job(self, key: NodeKey) -> Job:
+        return self.sim.jobs[key[0]]
+
+    def ready_groups(self) -> list[Sequence[NodeKey]]:
+        # jobs owed service first; only jobs with ready ops (a job with a
+        # non-empty frontier is necessarily still active)
+        jobs = sorted((j for j in self.sim.jobs.values()
+                       if self.sim.ready[j.jid]),
+                      key=lambda j: (j.virtual_time, j.jid))
+        return [[(j.jid, u) for u in self.sim.ready[j.jid]] for j in jobs]
+
+    def op(self, key: NodeKey) -> Op:
+        return self.sim.op(key)
+
+    def instance_plan(self, key: NodeKey) -> OpPlan:
+        job = self._job(key)
+        assert job.plan is not None and job.controller is not None
+        op = self.sim.op(key)
+        base = job.plan.plan_for(op, strategy2=self.strategy2)
+        curve = job.controller.store.curve(op)
+        return OpPlan(base.threads, base.variant,
+                      curve.predict(base.threads, base.variant))
+
+    def candidates_for(self, key: NodeKey, k: int) -> list[OpPlan]:
+        job = self._job(key)
+        assert job.controller is not None
+        return job.controller.candidates_for(self.sim.op(key), k)
+
+    def clamp(self, key: NodeKey, proposal: OpPlan) -> OpPlan:
+        job = self._job(key)
+        assert job.plan is not None
+        return job.plan.clamp(self.sim.op(key), proposal)   # job-aware S2
+
+    def predict(self, key: NodeKey, threads: int, variant: bool) -> float:
+        job = self._job(key)
+        assert job.controller is not None
+        return job.controller.store.curve(self.sim.op(key)).predict(
+            threads, variant)
+
+    def commit(self, key: NodeKey, sched: ScheduledOp) -> None:
+        self.sim.launch(key, sched)
+
+    def charge(self, key: NodeKey, sched: ScheduledOp) -> None:
+        # weighted fair share: charge core-seconds at launch time
+        eff = (self.machine.spec.hyper_thread_efficiency
+               if sched.hyper else 1.0)
+        self._job(key).service += sched.threads * sched.duration * eff
+
+
 class PoolScheduler:
-    """Strategy 3/4 admission generalized to a multi-job ready frontier."""
+    """Thin multi-job adapter over ``StrategyCore`` (Strategies 3/4 across
+    every admitted job's ready frontier, job-aware S2 clamp, cross-job
+    interference blacklist, weighted fair share)."""
 
     def __init__(self, machine: SimMachine, config: PoolConfig, *,
                  recorder: InterferenceRecorder):
         self.machine = machine
         self.config = config
         self.recorder = recorder
-        self.cores = machine.spec.cores
+        self.core = StrategyCore(machine, config.strategy_config(),
+                                 recorder=recorder)
+        self.cores = self.core.cores
 
-    # ---- shared helpers (job-aware versions of CorunScheduler's) -------
-    def _free_cores(self, sim: _PoolSim) -> int:
-        return free_cores(sim.running.values(), self.cores)
+    def adapter(self, sim: _PoolSim) -> _PoolAdapter:
+        return _PoolAdapter(sim, self.machine,
+                            strategy2=self.config.runtime.strategy2)
 
-    def _instance_plan(self, job: Job, op: Op) -> OpPlan:
-        assert job.plan is not None and job.controller is not None
-        base = job.plan.plan_for(op, strategy2=self.config.runtime.strategy2)
-        curve = job.controller.store.curve(op)
-        return OpPlan(base.threads, base.variant,
-                      curve.predict(base.threads, base.variant))
+    # Strategy entry points kept as the public seam (delegating to the
+    # shared core); ``active`` is accepted for compatibility but the ready
+    # frontier is derived from the sim's admitted jobs.
+    def try_corun(self, sim: _PoolSim,
+                  active: list[Job] | None = None) -> bool:
+        return self.core.try_corun(self.adapter(sim))
 
-    def _duration(self, op: Op, plan: OpPlan, hyper: bool,
-                  sim: _PoolSim) -> float:
-        pl = Placement(plan.threads, cache_sharing=plan.variant,
-                       hyper_thread=hyper)
-        share = self.machine.corun_bw_share(
-            plan.threads, (r.threads for r in sim.running.values()))
-        return self.machine.op_time(op, pl, bw_share=share)
+    def run_biggest(self, sim: _PoolSim,
+                    active: list[Job] | None = None) -> bool:
+        return self.core.run_biggest(self.adapter(sim))
 
-    def _launch(self, sim: _PoolSim, job: Job, uid: int, plan: OpPlan,
-                hyper: bool) -> None:
-        op = sim.graphs[job.jid].ops[uid]
-        dur = self._duration(op, plan, hyper, sim)
-        sched = ScheduledOp(op=op, threads=plan.threads, variant=plan.variant,
-                            hyper=hyper, start=sim.clock,
-                            finish=sim.clock + dur,
-                            predicted=plan.predicted_time)
-        # cross-job interference bookkeeping, same class-pair key as the
-        # single-graph scheduler (the machine doesn't care who launched)
-        for other in sim.running.values():
-            self.recorder.record(op.op_class, other.op.op_class,
-                                 plan.predicted_time, dur)
-        sim.launch((job.jid, uid), sched)
-        # weighted fair share: charge core-seconds at launch time
-        eff = (self.machine.spec.hyper_thread_efficiency if hyper else 1.0)
-        job.service += plan.threads * dur * eff
-
-    def _jobs_by_share(self, active: list[Job], sim: _PoolSim) -> list[Job]:
-        """Jobs owed service first; only jobs with ready ops."""
-        return sorted((j for j in active if sim.ready[j.jid]),
-                      key=lambda j: (j.virtual_time, j.jid))
-
-    # ---- Strategy 3 across jobs ---------------------------------------
-    def try_corun(self, sim: _PoolSim, active: list[Job]) -> bool:
-        free = self._free_cores(sim)
-        if free <= 0 or not sim.any_ready:
-            return False
-        running_classes = [r.op.op_class for r in sim.running.values()]
-        horizon = remaining_horizon(sim.running.values(), sim.clock)
-        for job in self._jobs_by_share(active, sim):
-            assert job.controller is not None and job.plan is not None
-            order = sorted(
-                sim.ready[job.jid],
-                key=lambda u: -self._instance_plan(
-                    job, sim.graphs[job.jid].ops[u]).predicted_time)
-            for uid in order:
-                op = sim.graphs[job.jid].ops[uid]
-                if not self.recorder.compatible(op.op_class, running_classes):
-                    continue
-                cands = job.controller.candidates_for(
-                    op, self.config.runtime.candidates)
-                pick = pick_admissible(cands, free, horizon)
-                if pick is None:
-                    continue
-                pick = job.plan.clamp(op, pick)     # job-aware S2 clamp
-                if pick.threads > free:
-                    continue
-                self._launch(sim, job, uid, pick, hyper=False)
-                return True
-        return False
-
-    # ---- fallback: biggest ready op, most-owed job first ----------------
-    def run_biggest(self, sim: _PoolSim, active: list[Job]) -> bool:
-        free = self._free_cores(sim)
-        if free <= 0 or not sim.any_ready:
-            return False
-        if sim.running and free < self.config.min_fallback_cores:
-            return False
-        horizon = (remaining_horizon(sim.running.values(), sim.clock)
-                   if sim.running else float("inf"))
-        # unlike the single-graph fallback there are other tenants to try:
-        # if the most-owed job's biggest op would outlast the running set,
-        # a later job's op may still fit — don't idle the cores over it
-        for job in self._jobs_by_share(active, sim):
-            uid = max(sim.ready[job.jid],
-                      key=lambda u: self._instance_plan(
-                          job, sim.graphs[job.jid].ops[u]).predicted_time)
-            op = sim.graphs[job.jid].ops[uid]
-            plan = self._instance_plan(job, op)
-            if plan.threads > free:
-                assert job.controller is not None
-                plan = OpPlan(free, plan.variant,
-                              job.controller.store.curve(op).predict(
-                                  free, plan.variant))
-            if plan.predicted_time > horizon * self.config.fallback_slack:
-                continue
-            self._launch(sim, job, uid, plan, hyper=False)
-            return True
-        return False
-
-    # ---- Strategy 4 across jobs ---------------------------------------
-    def try_hyper(self, sim: _PoolSim, active: list[Job]) -> bool:
-        if not self.config.runtime.enable_s4 or not sim.any_ready:
-            return False
-        if self._free_cores(sim) > 0:
-            return False
-        ht_running = sum(1 for r in sim.running.values() if r.hyper)
-        if ht_running >= self.config.runtime.max_ht_corunners:
-            return False
-        running_classes = [r.op.op_class for r in sim.running.values()]
-        by_jid = {j.jid: j for j in active}
-
-        def serial_time(key: NodeKey) -> tuple[float, float, int, int]:
-            job = by_jid[key[0]]
-            assert job.controller is not None
-            op = sim.op(key)
-            return (job.controller.store.curve(op).predict(1, False),
-                    job.virtual_time, key[0], key[1])
-
-        for key in sorted(sim.ready_keys(), key=serial_time):
-            job = by_jid[key[0]]
-            op = sim.op(key)
-            if not self.recorder.compatible(op.op_class, running_classes):
-                continue
-            inst = self._instance_plan(job, op)
-            plan = OpPlan(min(inst.threads, self.cores), inst.variant,
-                          inst.predicted_time)
-            self._launch(sim, job, key[1], plan, hyper=True)
-            return True
-        return False
+    def try_hyper(self, sim: _PoolSim,
+                  active: list[Job] | None = None) -> bool:
+        return self.core.try_hyper(self.adapter(sim))
 
 
 @dataclasses.dataclass
@@ -390,7 +378,15 @@ class RuntimePool:
     def run(self) -> PoolResult:
         sim = _PoolSim()
         active: list[Job] = []
-        sched = self.scheduler
+        # ONE launch fixpoint loop for both schedulers: the shared core's
+        # drain handles S3/fallback/S4 gating (S3 off means serial
+        # launches only; the serial baseline honors the flag too, so
+        # comparisons stay apples-to-apples)
+        adapter = self.scheduler.adapter(sim)
+        core = self.scheduler.core
+        # freeze the cross-job interference blacklist for this pool run
+        # (pairs recorded during the run bite on the next one)
+        core.begin_run()
         self._admit(sim, active)
         while active or len(self.queue):
             if not active:
@@ -400,23 +396,7 @@ class RuntimePool:
                 sim.clock = nxt
                 self._admit(sim, active)
                 continue
-            launched = True
-            while launched:
-                launched = False
-                # same strategy gating as CorunScheduler.run: S3 off means
-                # serial launches only (the serial baseline honors the
-                # flag too, so comparisons stay apples-to-apples)
-                if self.config.runtime.enable_s3:
-                    if sim.running:
-                        launched = sched.try_corun(sim, active)
-                        if not launched:
-                            launched = sched.run_biggest(sim, active)
-                    else:
-                        launched = sched.run_biggest(sim, active)
-                elif not sim.running:
-                    launched = sched.run_biggest(sim, active)
-                if not launched:
-                    launched = sched.try_hyper(sim, active)
+            core.drain(adapter)
             if sim.running:
                 # a tenant arriving before the next op completes must not
                 # wait out that op: advance to the arrival, admit, and

@@ -8,9 +8,12 @@ import pytest
 pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (CurveModel, HillClimbProfiler, Op, Placement,
-                        SimMachine, paper_case_lists)
+from repro.core import (ConcurrencyRuntime, CurveModel, GraphBuilder,
+                        HillClimbProfiler, Op, OpPlan, Placement, SimMachine,
+                        paper_case_lists, pick_admissible)
 from repro.hw.hlo import parse_collectives, shape_bytes
+from repro.multitenant import (PoolConfig, RuntimePool, compare_timelines,
+                               corun_timeline, pool_timeline, timeline_rows)
 from repro.optim import CompressionConfig, compress, init_error_state
 
 SETTINGS = dict(max_examples=25, deadline=None)
@@ -76,6 +79,138 @@ def test_machine_time_positive_monotone_work(threads, f):
     pl = Placement(threads)
     assert machine.op_time(small, pl) > 0
     assert machine.op_time(big, pl) > machine.op_time(small, pl)
+
+
+# ---------------------------------------------------------------------------
+# StrategyCore invariants over random op-graph DAGs
+# ---------------------------------------------------------------------------
+
+# per-class cost factors: cost must be a FUNCTION of (op_class, shape) —
+# the paper's premise (and the profile-store key), so the generator never
+# builds two ops sharing a size_key with different analytic cost
+_DAG_CLASSES = {
+    # op_class: (flops/elem, bytes/elem, parallel_fraction)
+    "Conv2D": (660.0, 200.0, 0.96),
+    "MatMul": (400.0, 60.0, 0.96),
+    "FusedBatchNorm": (8.0, 12.0, 0.80),
+    "Mul": (1.0, 12.0, 0.60),
+    "Sum": (1.0, 8.0, 0.65),
+}
+_DAG_SHAPES = [(32, 8, 8, 64), (16, 16, 16, 32), (64, 4, 4, 128), (8, 8, 8, 8)]
+
+
+@st.composite
+def op_graphs(draw):
+    """Random DAGs: each op depends on a subset of earlier ops, so the
+    graph is acyclic by construction."""
+    n = draw(st.integers(2, 12))
+    b = GraphBuilder("rand")
+    for i in range(n):
+        cls = draw(st.sampled_from(sorted(_DAG_CLASSES)))
+        shape = draw(st.sampled_from(_DAG_SHAPES))
+        deps = (draw(st.lists(st.sampled_from(range(i)), unique=True,
+                              max_size=min(i, 3))) if i else [])
+        elems = float(np.prod(shape))
+        fpe, bpe, pf = _DAG_CLASSES[cls]
+        b.add(cls, shape, flops=elems * fpe, bytes_moved=elems * bpe,
+              parallel_fraction=pf, deps=deps)
+    return b.build()
+
+
+DAG_SETTINGS = dict(max_examples=10, deadline=None)
+
+
+@settings(**DAG_SETTINGS)
+@given(graph=op_graphs())
+def test_strategy_core_schedule_invariants(graph):
+    """Every op exactly once, deps respected, cores never oversubscribed."""
+    machine = SimMachine()
+    rt = ConcurrencyRuntime(machine=machine)
+    res = rt.execute_step(graph)
+    assert len(res.records) == graph.n_ops
+    assert len({r.op.uid for r in res.records}) == graph.n_ops
+    start = {r.op.uid: r.start for r in res.records}
+    finish = {r.op.uid: r.finish for r in res.records}
+    for op in graph.ops.values():
+        for d in op.deps:
+            assert finish[d] <= start[op.uid] + 1e-12
+    times = sorted(start.values()) + sorted(finish.values())
+    for t in times:
+        used = sum(r.threads for r in res.records
+                   if not r.hyper and r.start <= t < r.finish)
+        assert used <= machine.spec.cores
+
+
+@settings(**DAG_SETTINGS)
+@given(graph=op_graphs())
+def test_single_job_pool_matches_corun_on_random_dags(graph):
+    """The differential property: 1-job pool == CorunScheduler, bitwise,
+    on arbitrary DAGs — not just the zoo models."""
+    single = corun_timeline(graph, SimMachine(seed=0))
+    pooled = pool_timeline(graph, SimMachine(seed=0))
+    assert single.makespan == pooled.makespan
+    assert not compare_timelines(timeline_rows(single), timeline_rows(pooled))
+
+
+@settings(**DAG_SETTINGS)
+@given(graphs=st.lists(op_graphs(), min_size=2, max_size=3),
+       priorities=st.lists(st.floats(0.5, 4.0), min_size=3, max_size=3))
+def test_pool_service_accounting_sums(graphs, priorities):
+    """Fair-share service charged at launch must equal the core-seconds
+    actually granted (threads x duration, hyper lanes at HT efficiency)."""
+    machine = SimMachine()
+    pool = RuntimePool(machine=machine, config=PoolConfig(max_active=3))
+    jobs = [pool.submit(g, priority=p, name=f"j{i}")
+            for i, (g, p) in enumerate(zip(graphs, priorities))]
+    res = pool.run()
+    eff = machine.spec.hyper_thread_efficiency
+    for job in jobs:
+        granted = sum(r.threads * r.duration * (eff if r.hyper else 1.0)
+                      for r in res.records[job.jid])
+        assert job.service == pytest.approx(granted, rel=1e-9)
+
+
+@settings(**DAG_SETTINGS)
+@given(graph=op_graphs(), a=st.sampled_from(sorted(_DAG_CLASSES)),
+       b=st.sampled_from(sorted(_DAG_CLASSES)))
+def test_blacklisted_pair_never_overlaps_on_random_dags(graph, a, b):
+    """A pair blacklisted before the step starts is never co-launched,
+    whatever the DAG shape — on any launch path (S3, fallback, S4)."""
+    rt = ConcurrencyRuntime(machine=SimMachine())
+    rt.profile(graph)
+    rt.recorder.record(a, b, 1.0, 10.0)      # far above the 1.35 threshold
+    res = rt.execute_step(graph)
+    ra = [r for r in res.records if r.op.op_class == a]
+    rb = [r for r in res.records if r.op.op_class == b]
+    for x in ra:
+        for y in rb:
+            if x.op.uid == y.op.uid:
+                continue
+            assert not (x.start < y.finish - 1e-15
+                        and y.start < x.finish - 1e-15), \
+                f"blacklisted pair ({a}, {b}) co-launched"
+
+
+@settings(**SETTINGS)
+@given(threads=st.lists(st.integers(1, 68), min_size=1, max_size=6),
+       times=st.lists(st.floats(1e-5, 1.0), min_size=6, max_size=6),
+       free=st.integers(0, 68), extra=st.integers(0, 34),
+       horizon=st.floats(1e-4, 2.0))
+def test_pick_admissible_monotone_in_free_cores(threads, times, free,
+                                                extra, horizon):
+    """Strategy-3 admission: the pick never exceeds the idle cores or the
+    horizon, and admission is monotone — growing the idle-core budget
+    never loses admissibility and never picks MORE threads (the admissible
+    set only grows, and the rule takes the minimum)."""
+    cands = [OpPlan(t, False, y) for t, y in zip(threads, times)]
+    pick = pick_admissible(cands, free, horizon)
+    if pick is not None:
+        assert pick.threads <= free
+        assert pick.predicted_time <= horizon
+    wider = pick_admissible(cands, free + extra, horizon)
+    if pick is not None:
+        assert wider is not None
+        assert wider.threads <= pick.threads
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,177 @@
+"""Differential suite: both schedulers ARE the one StrategyCore.
+
+* single-job pool reproduces CorunScheduler timelines bit-for-bit on
+  every paper-zoo model (and under strategy-knob variations);
+* committed golden timelines (tests/golden/) pin the schedule of
+  resnet50 + dcgan so refactors diff against known-good output — on
+  mismatch the divergence report is written to test-artifacts/ for CI to
+  upload;
+* a blacklisted op-class pair is never co-launched by EITHER scheduler
+  (the ROADMAP-noted dead-``excluded``-path risk: only the pool used to
+  be tested).
+"""
+
+import json
+import pathlib
+
+import pytest
+
+from repro.core import (ConcurrencyRuntime, GraphBuilder, RuntimeConfig,
+                        SimMachine, build_paper_graph)
+from repro.multitenant import (PoolConfig, RuntimePool, check_parity,
+                               compare_timelines, corun_timeline,
+                               pool_timeline, timeline_rows)
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+ARTIFACT_DIR = pathlib.Path(__file__).parent.parent / "test-artifacts"
+
+ZOO = ["resnet50", "dcgan", "inception_v3", "alexnet"]
+
+
+def _assert_identical(single, pooled):
+    divs = compare_timelines(timeline_rows(single), timeline_rows(pooled))
+    assert single.makespan == pooled.makespan, (
+        f"makespan diverged: corun={single.makespan!r} "
+        f"pool={pooled.makespan!r}")
+    assert not divs, "timeline diverged:\n" + "\n".join(divs[:20])
+
+
+# ---------------------------------------------------------------------------
+# 1-job pool == CorunScheduler, bit for bit
+# ---------------------------------------------------------------------------
+
+class TestSingleJobPoolParity:
+    @pytest.mark.parametrize("model", ZOO)
+    def test_zoo_model_timelines_identical(self, model):
+        graph = build_paper_graph(model)
+        single = corun_timeline(graph, SimMachine(seed=0))
+        pooled = pool_timeline(graph, SimMachine(seed=0))
+        _assert_identical(single, pooled)
+
+    @pytest.mark.parametrize("config", [
+        RuntimeConfig(enable_s4=False),
+        RuntimeConfig(enable_s3=False, enable_s4=False),
+        RuntimeConfig(strategy2=False),
+        RuntimeConfig(candidates=1, max_ht_corunners=1),
+        RuntimeConfig(min_fallback_cores=34, fallback_slack=0.5),
+    ], ids=["no-s4", "serial", "no-s2", "tight", "fallback-knobs"])
+    def test_strategy_knobs_preserved_through_both_adapters(self, config):
+        graph = build_paper_graph("dcgan")
+        single = corun_timeline(graph, SimMachine(seed=0), config)
+        pooled = pool_timeline(graph, SimMachine(seed=0), config)
+        _assert_identical(single, pooled)
+
+    def test_other_machine_seed(self):
+        graph = build_paper_graph("resnet50")
+        single = corun_timeline(graph, SimMachine(seed=7))
+        pooled = pool_timeline(graph, SimMachine(seed=7))
+        _assert_identical(single, pooled)
+
+    def test_check_parity_report_shape(self):
+        report = check_parity(["dcgan"])
+        assert report["ok"] is True
+        assert report["models"]["dcgan"]["divergences"] == []
+        assert report["models"]["dcgan"]["makespan"] > 0
+
+
+# ---------------------------------------------------------------------------
+# golden timelines (seeded) — refactors diff against known-good schedules
+# ---------------------------------------------------------------------------
+
+class TestGoldenTimelines:
+    @pytest.mark.parametrize("model", ["resnet50", "dcgan"])
+    def test_matches_committed_golden(self, model):
+        golden = json.loads(
+            (GOLDEN_DIR / f"strategy_{model}.json").read_text())
+        res = corun_timeline(build_paper_graph(model),
+                             SimMachine(seed=golden["seed"]))
+        rows = timeline_rows(res)
+        divs = compare_timelines(golden["records"], rows,
+                                 label_a="golden", label_b="current")
+        if res.makespan != golden["makespan"]:
+            divs.insert(0, f"makespan: golden={golden['makespan']!r} "
+                           f"current={res.makespan!r}")
+        if divs:
+            # leave a machine-readable diff for CI to upload as artifact
+            ARTIFACT_DIR.mkdir(exist_ok=True)
+            (ARTIFACT_DIR / f"golden_diff_{model}.json").write_text(
+                json.dumps({"model": model, "divergences": divs,
+                            "current_makespan": res.makespan,
+                            "current_records": rows}, indent=1))
+        assert not divs, (
+            f"{model} schedule drifted from golden fixture "
+            f"(diff written to test-artifacts/golden_diff_{model}.json):\n"
+            + "\n".join(divs[:20]))
+
+
+# ---------------------------------------------------------------------------
+# interference blacklist respected by BOTH schedulers
+# ---------------------------------------------------------------------------
+
+def _two_class_graph(name="g", per_class=2):
+    """Independent chains of classes A and B that WOULD co-run freely."""
+    b = GraphBuilder(name)
+    for cls in ("ClassA", "ClassB"):
+        prev = None
+        for i in range(per_class):
+            prev = b.add(cls, (32, 16, 16, 64), flops=4e8, bytes_moved=2e6,
+                         deps=[prev] if prev is not None else [])
+    return b.build()
+
+
+def _overlaps(recs_a, recs_b):
+    return any(a.start < b.finish - 1e-15 and b.start < a.finish - 1e-15
+               for a in recs_a for b in recs_b)
+
+
+class TestBlacklistNeverCoLaunched:
+    def _split(self, records):
+        return ([r for r in records if r.op.op_class == "ClassA"],
+                [r for r in records if r.op.op_class == "ClassB"])
+
+    def test_corun_scheduler_would_corun_without_blacklist(self):
+        rt = ConcurrencyRuntime(machine=SimMachine())
+        res = rt.execute_step(_two_class_graph())
+        a, b = self._split(res.records)
+        assert _overlaps(a, b), "control: A/B must co-run when compatible"
+
+    def test_corun_scheduler_respects_blacklist(self):
+        rt = ConcurrencyRuntime(machine=SimMachine())
+        graph = _two_class_graph()
+        rt.profile(graph)
+        # one observation far above the 1.35x threshold blacklists the pair
+        rt.recorder.record("ClassA", "ClassB", 1.0, 10.0)
+        assert rt.recorder.blacklisted("ClassA", "ClassB")
+        res = rt.execute_step(graph)
+        a, b = self._split(res.records)
+        assert len(a) and len(b)
+        assert not _overlaps(a, b), \
+            "blacklisted pair was co-launched by CorunScheduler"
+
+    def test_pool_scheduler_respects_blacklist_across_jobs(self):
+        pool = RuntimePool(machine=SimMachine(),
+                           config=PoolConfig(max_active=2))
+        ga = GraphBuilder("ja")
+        prev = None
+        for _ in range(3):
+            prev = ga.add("ClassA", (32, 16, 16, 64), flops=4e8,
+                          bytes_moved=2e6,
+                          deps=[prev] if prev is not None else [])
+        gb = GraphBuilder("jb")
+        prev = None
+        for _ in range(3):
+            prev = gb.add("ClassB", (32, 16, 16, 64), flops=4e8,
+                          bytes_moved=2e6,
+                          deps=[prev] if prev is not None else [])
+        pool.submit(ga.build(), name="ja")
+        pool.submit(gb.build(), name="jb")
+        pool.recorder.record("ClassA", "ClassB", 1.0, 10.0)
+        assert pool.recorder.blacklisted("ClassA", "ClassB")
+        res = pool.run()
+        a = [r for recs in res.records.values() for r in recs
+             if r.op.op_class == "ClassA"]
+        b = [r for recs in res.records.values() for r in recs
+             if r.op.op_class == "ClassB"]
+        assert len(a) == 3 and len(b) == 3
+        assert not _overlaps(a, b), \
+            "blacklisted pair was co-launched across pool tenants"
