@@ -29,9 +29,10 @@ def run_parity_check() -> None:
 
 def main() -> None:
     from benchmarks import kernel_bench, multitenant_bench, paper_tables, \
-        roofline
+        preemption_bench, roofline
     fns = (list(paper_tables.ALL) + list(kernel_bench.ALL)
-           + list(roofline.ALL) + list(multitenant_bench.ALL))
+           + list(roofline.ALL) + list(multitenant_bench.ALL)
+           + list(preemption_bench.ALL))
     args = [a for a in sys.argv[1:] if a != "--check-parity"]
     parity = "--check-parity" in sys.argv[1:]
     only = args[0] if args else None

@@ -22,8 +22,8 @@ from repro.core.perfmodel import (
     paper_case_lists, power_of_two_cases, REGRESSORS)
 from repro.core.concurrency import ConcurrencyController, ConcurrencyPlan, OpPlan
 from repro.core.strategy import (
-    StrategyAdapter, StrategyConfig, StrategyCore, free_cores,
-    pick_admissible, remaining_horizon)
+    PreemptionPolicy, StrategyAdapter, StrategyConfig, StrategyCore,
+    free_cores, pick_admissible, remaining_horizon)
 from repro.core.scheduler import (
     CorunScheduler, ScheduleResult, ScheduledOp, uniform_schedule,
     manual_best_schedule)
@@ -42,7 +42,7 @@ __all__ = [
     "RegressionSuite",
     "paper_case_lists", "power_of_two_cases", "REGRESSORS",
     "ConcurrencyController", "ConcurrencyPlan", "OpPlan",
-    "StrategyAdapter", "StrategyConfig", "StrategyCore",
+    "PreemptionPolicy", "StrategyAdapter", "StrategyConfig", "StrategyCore",
     "free_cores", "pick_admissible", "remaining_horizon",
     "CorunScheduler", "ScheduleResult", "ScheduledOp",
     "uniform_schedule",

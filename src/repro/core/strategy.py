@@ -16,7 +16,13 @@ only in job plumbing — a drift hazard the ROADMAP flagged explicitly.
 * **Strategy 2 interaction** — every S3 proposal passes through the
   adapter's ``clamp`` (per-class hysteresis guard);
 * the **launch drain loop** (``drain``) that fixpoints S3/fallback/S4 at
-  one scheduling instant, including the S3-off serial gating.
+  one scheduling instant, including the S3-off serial gating;
+* the **deadline path** (``try_preempt``, gated by
+  ``StrategyConfig.preemption`` — OFF by default): an overdue op (adapter
+  reports non-positive deadline slack) launches with the throughput guard
+  waived, squeezed to a bounded-loss width if need be, or by revoking the
+  longest-remaining running op (checkpoint-free, work-conserving — the
+  victim returns to its ready frontier via ``StrategyAdapter.revoke``).
 
 What *varies* between the single-graph scheduler and the multi-tenant pool
 is injected through ``StrategyAdapter``:
@@ -112,6 +118,30 @@ def pick_admissible(cands: list[OpPlan], free: int,
 
 
 @dataclasses.dataclass(frozen=True)
+class PreemptionPolicy:
+    """Checkpoint-free preemption knobs (off by default, so every scheduler
+    built on the core — and the differential/golden suites — behaves
+    exactly as before unless a pool opts in).
+
+    When a ready op belongs to a tenant whose deadline slack has run out
+    (``StrategyAdapter.deadline_slack`` <= 0) and nothing else launched at
+    this instant, the core may claim cores for it: first by launching into
+    idle cores with the Strategy-3 throughput guard waived (a deadline
+    outranks makespan), and failing that by CANCELLING the running op with
+    the largest remaining time.  Preemption is work-conserving: the victim
+    node returns to its job's ready frontier (it restarts from scratch —
+    checkpoint-free) and its partial service is charged back at the
+    machine's restart-waste factor.
+    """
+
+    enabled: bool = False
+    # a victim must have at least this many times the urgent op's predicted
+    # time still remaining — never axe an op that would have finished before
+    # the waiter anyway (the revoked partial work is pure waste)
+    min_victim_advantage: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
 class StrategyConfig:
     """The strategy knobs shared by every scheduler built on the core."""
 
@@ -121,6 +151,7 @@ class StrategyConfig:
     max_ht_corunners: int = 2        # Strategy 4 hyper-thread lane width
     min_fallback_cores: int = 4      # don't squeeze the fallback op
     fallback_slack: float = 1.25     # horizon slack for the fallback launch
+    preemption: PreemptionPolicy = PreemptionPolicy()
 
 
 class StrategyAdapter(abc.ABC):
@@ -183,6 +214,28 @@ class StrategyAdapter(abc.ABC):
 
     def charge(self, key: NodeKey, sched: ScheduledOp) -> None:
         """Post-launch accounting hook (pool: weighted fair share)."""
+
+    # ---- deadlines / preemption (optional) -----------------------------
+    def deadline_slack(self, key: NodeKey) -> float | None:
+        """Deadline slack of the node's tenant at this instant: time left
+        until the deadline minus the node's predicted downstream critical
+        path.  ``None`` means no deadline (the default — single-graph
+        scheduling has no SLOs, so preemption can never trigger there)."""
+        return None
+
+    def revoke(self, key: NodeKey) -> ScheduledOp:
+        """Cancel a running launch: remove it from the event sim and return
+        the node to its ready frontier (checkpoint-free — it will restart
+        from scratch).  Only adapters that opt into preemption implement
+        this; the core never calls it unless the policy is enabled."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support preemption")
+
+    def refund(self, key: NodeKey, sched: ScheduledOp,
+               elapsed: float) -> None:
+        """Accounting reversal for a revoked launch: un-charge the launch-
+        time service and bill the wasted partial run instead (pool: at the
+        machine's restart-waste factor)."""
 
 
 class StrategyCore:
@@ -355,17 +408,134 @@ class StrategyCore:
             return True
         return False
 
+    # ---- deadline-driven preemption ------------------------------------
+    def _overdue_by_urgency(self, adapter: StrategyAdapter
+                            ) -> list[NodeKey]:
+        """Ready ops with non-positive deadline slack, most urgent first
+        (earliest-deadline-first among tenants that are already late).
+        The deadline path tries them ALL in order: one op being stuck
+        (blacklisted against a running class, no viable victim) must not
+        deny a less-urgent-but-claimable tenant its launch."""
+        overdue: list[tuple[float, int, NodeKey]] = []
+        for gi, group in enumerate(adapter.ready_groups()):
+            for key in group:
+                s = adapter.deadline_slack(key)
+                if s is not None and s <= 0.0:
+                    overdue.append((s, gi, key))
+        overdue.sort(key=lambda t: t[:2])
+        return [key for _, _, key in overdue]
+
+    def try_preempt(self, adapter: StrategyAdapter) -> bool:
+        """Deadline path, tried before normal S3 admission each drain
+        iteration so an overdue op gets its PREFERRED width instead of
+        being squeezed into whatever S3 happens to leave idle.
+
+        If a ready op's tenant has run out of deadline slack, claim cores
+        for it: (1) if a candidate fits the idle cores, launch it with the
+        throughput guard waived (an op that outlasts the running set is a
+        makespan concern; a blown SLO is worse); (2) otherwise cancel the
+        running op with the largest remaining time and launch into the
+        reclaimed cores.  Work-conserving: the victim returns to its ready
+        frontier and the adapter's ``refund`` re-prices its partial run at
+        the restart-waste factor.  Victims must predate this scheduling
+        instant (an op relaunched at the same clock is never re-revoked, so
+        one instant cannot ping-pong) and must be strictly less urgent than
+        the waiter."""
+        pol = self.config.preemption
+        if not pol.enabled:
+            return False
+        for key in self._overdue_by_urgency(adapter):
+            if self._try_claim(adapter, key):
+                return True
+        return False
+
+    def _try_claim(self, adapter: StrategyAdapter, key: NodeKey) -> bool:
+        """Claim cores for ONE overdue ready op (see ``try_preempt``)."""
+        pol = self.config.preemption
+        op = adapter.op(key)
+        cands = adapter.candidates_for(key, self.config.candidates)
+        if not cands:
+            return False
+        running = adapter.running
+        free = self.free(adapter)
+        floor = self.config.min_fallback_cores
+        need = min(c.threads for c in cands)
+        pred = min(c.predicted_time for c in cands if c.threads == need)
+        # S3 off = serial execution: the deadline path must not introduce
+        # co-running — it may only act on an idle machine or by REPLACING
+        # the sole runner (one revoke), never by launching alongside it
+        serial = not self.config.enable_s3
+        if serial and running and (
+                len(running) > 1 or next(iter(running.values())).hyper):
+            return False
+        must_preempt = serial and bool(running)
+        # otherwise idle cores suffice when the preferred width fits OR a
+        # squeezed launch loses at most ~2x width (bounded time penalty
+        # beats the waste of revoking someone's partial work)
+        victim_key = None
+        if must_preempt or (free < need
+                            and free < max(floor, (need + 1) // 2)):
+            # pick the victim BEFORE revoking so a failed fit leaves the
+            # running set untouched
+            slack = adapter.deadline_slack(key)
+            victims = []
+            for vk, r in running.items():
+                if r.hyper or r.start >= adapter.clock:
+                    continue
+                vs = adapter.deadline_slack(vk)
+                if vs is not None and (slack is None or vs <= slack):
+                    continue               # never rob a tenant just as late
+                remaining = r.finish - adapter.clock
+                if remaining <= pred * pol.min_victim_advantage:
+                    continue               # it finishes before the waiter
+                victims.append((remaining, vk))
+            if victims:
+                _, victim_key = max(victims)
+                if (not must_preempt
+                        and free + running[victim_key].threads < floor):
+                    victim_key = None      # revoking gains too little
+            if victim_key is None and (must_preempt or free < floor):
+                return False               # nothing useful to claim now
+        rest = [r.op.op_class for vk, r in running.items()
+                if vk != victim_key]
+        if not self._compatible(op.op_class, rest):
+            return False
+        if victim_key is not None:
+            revoked = adapter.revoke(victim_key)
+            adapter.refund(victim_key, revoked,
+                           adapter.clock - revoked.start)
+            free = self.free(adapter)
+        # fewest-thread admissible candidate, horizon deliberately waived;
+        # clamp to the claimed cores when the preferred width is unreachable
+        pick = pick_admissible(cands, free, float("inf"))
+        if pick is None:
+            pick = min(cands, key=lambda c: c.threads)
+        pick = adapter.clamp(key, pick)
+        if pick.threads > free:
+            pick = OpPlan(free, pick.variant,
+                          adapter.predict(key, free, pick.variant))
+        self.launch(adapter, key, pick, hyper=False)
+        return True
+
     # ---- the launch fixpoint loop --------------------------------------
     def drain(self, adapter: StrategyAdapter) -> None:
         """Launch everything launchable at this scheduling instant.
 
         S3 on: co-run admission with the run-biggest fallback.  S3 off:
         serial execution with per-op tuned concurrency only (Strategies
-        1-2, the paper's Fig 3.a configuration).  S4 tops up the
+        1-2, the paper's Fig 3.a configuration).  The deadline path
+        (``try_preempt``) runs first each iteration — an overdue op
+        belongs on real cores at its preferred width, not squeezed into
+        S3 leftovers or the 0.55-efficiency HT lane.  S4 tops up the
         hyper-thread lane either way."""
         launched = True
         while launched:
-            launched = False
+            # deadline path first: an overdue op must get its preferred
+            # width now (preempting if the cores are taken), not be
+            # squeezed into whatever S3 happens to leave idle
+            launched = self.try_preempt(adapter)
+            if launched:
+                continue
             if self.config.enable_s3:
                 if adapter.running:
                     launched = self.try_corun(adapter)

@@ -79,6 +79,13 @@ class KnlLikeSpec:
                                           # ceil(E/chunk_elems) useful threads
                                           # (MKL-DNN loop-blocking structure)
     hyper_thread_efficiency: float = 0.55 # 2nd HW thread relative throughput
+    restart_waste: float = 0.30           # fraction of a preempted op's
+                                          # partial core-seconds charged as
+                                          # waste: checkpoint-free preemption
+                                          # discards the partial result, but
+                                          # the fair-share ledger should not
+                                          # bill the victim full price for
+                                          # work the SCHEDULER threw away
 
     @property
     def logical_cpus(self) -> int:

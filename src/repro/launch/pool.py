@@ -4,6 +4,11 @@ Builds a tenant mix of paper step graphs (and optionally serving waves),
 runs it through the ``RuntimePool`` co-scheduler and through the serial
 one-graph-at-a-time baseline, and reports aggregate throughput, per-job
 latency, fairness, and plan-cache amortization as JSON.
+
+Deadline/SLO knobs: ``--deadlines`` gives each job an absolute deadline
+(submit time + per-job budget) and ``--preempt`` arms checkpoint-free
+op preemption, so a tenant that runs out of slack can revoke the
+longest-remaining running op (see ``repro.core.strategy.PreemptionPolicy``).
 """
 
 from __future__ import annotations
@@ -12,7 +17,7 @@ import argparse
 import json
 
 from repro.core import SimMachine, build_paper_graph
-from repro.multitenant import PoolConfig, RuntimePool
+from repro.multitenant import PoolConfig, PreemptionPolicy, RuntimePool
 
 
 def main() -> None:
@@ -24,6 +29,19 @@ def main() -> None:
     ap.add_argument("--max-active", type=int, default=3)
     ap.add_argument("--arrival-gap", type=float, default=0.0,
                     help="seconds between successive job arrivals")
+    ap.add_argument("--deadlines", default=None,
+                    help="comma-separated per-job latency budgets in "
+                         "seconds (deadline = submit time + budget; empty "
+                         "entry = best-effort job)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="enable deadline-driven checkpoint-free "
+                         "preemption (off: no launch is ever revoked; "
+                         "note --deadlines alone already reorders "
+                         "admission/fair-share — only a run with neither "
+                         "flag is bit-for-bit the PR-2 pool)")
+    ap.add_argument("--reservation-window", type=float, default=0.0,
+                    help="hold the last active slot for a higher-priority "
+                         "deadlined arrival due within this many seconds")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scale", type=int, default=1,
                     help="layer-count multiplier for every job graph")
@@ -40,6 +58,12 @@ def main() -> None:
              if args.priorities else [1.0] * len(models))
     if len(prios) != len(models):
         raise SystemExit("--priorities length must match --jobs")
+    budgets: list[float | None] = [None] * len(models)
+    if args.deadlines:
+        entries = args.deadlines.split(",")
+        if len(entries) != len(models):
+            raise SystemExit("--deadlines length must match --jobs")
+        budgets = [float(e) if e.strip() else None for e in entries]
 
     parity = None
     if args.check_parity:
@@ -52,12 +76,20 @@ def main() -> None:
             raise SystemExit("pool-vs-corun parity check FAILED")
         parity = {m: rec["ok"] for m, rec in report["models"].items()}
 
-    pool = RuntimePool(machine=SimMachine(seed=args.seed),
-                       config=PoolConfig(max_active=args.max_active))
-    for i, (model, prio) in enumerate(zip(models, prios)):
+    pool = RuntimePool(
+        machine=SimMachine(seed=args.seed),
+        config=PoolConfig(
+            max_active=args.max_active,
+            reservation_window=args.reservation_window,
+            preemption=(PreemptionPolicy(enabled=True)
+                        if args.preempt else None)))
+    for i, (model, prio, budget) in enumerate(zip(models, prios, budgets)):
+        submit_time = i * args.arrival_gap
         pool.submit(build_paper_graph(model, scale=args.scale),
                     priority=prio, name=f"{model}-{i}",
-                    submit_time=i * args.arrival_gap)
+                    submit_time=submit_time,
+                    deadline=(submit_time + budget
+                              if budget is not None else None))
     res = pool.run()
     serial = pool.run_serial()
 
@@ -67,9 +99,15 @@ def main() -> None:
             "priority": j.priority,
             "queue_wait_s": j.queue_wait,
             "latency_s": j.latency,
+            "run_latency_s": j.run_latency,
             "serial_latency_s": serial.job_latencies[j.jid],
             "service_core_s": j.service,
             "demand_core_s": j.demand,
+            "preemptions": j.preemptions,      # launches revoked FROM j
+            **({"deadline_s": j.deadline,
+                "deadline_met": (j.latency is not None
+                                 and j.finish_time <= j.deadline)}
+               if j.deadline is not None else {}),
         } for j in res.jobs],
         "pool_makespan_s": res.makespan,
         "serial_makespan_s": serial.makespan,
@@ -77,8 +115,14 @@ def main() -> None:
         "pool_throughput_ops_s": res.aggregate_throughput,
         "serial_throughput_ops_s": serial.aggregate_throughput,
         "fairness_jain": res.fairness,
-        "slowdown_fairness_jain": res.slowdown_fairness(
+        # e2e divides submit-to-finish by the solo makespan (charges the
+        # scheduler for admission queueing); sched divides admit-to-finish
+        # (isolates the core scheduler from pure queue wait)
+        "slowdown_fairness_e2e_jain": res.slowdown_fairness(
             serial.job_makespans),
+        "slowdown_fairness_sched_jain": res.slowdown_fairness(
+            serial.job_makespans, include_queue_wait=False),
+        "preemptions": res.n_preemptions,
         "plan_cache": res.cache_stats,
         "serial_profiling_probes": serial.profiling_probes,
         **({"parity_check": parity} if parity is not None else {}),

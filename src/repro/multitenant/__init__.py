@@ -3,19 +3,26 @@
 Layers (each builds on ``repro.core``, none of core depends back):
 
   job        -- Job + JobQueue admission controller (priority, demand cap,
-                weighted-fair-share accounting in perfmodel core-seconds)
+                weighted-fair-share accounting in perfmodel core-seconds;
+                deadlines: EDF within a priority level, dynamic
+                slack-scaled priority, slot reservation, per-node
+                critical-path pricing for deadline slack)
   plancache  -- cross-job curve cache (keyed by the op's full analytic
                 profile) so one tenant's profiling probes amortize over
                 every tenant
   pool       -- PoolScheduler: thin multi-job adapter over the shared
                 ``repro.core.strategy.StrategyCore`` (job-aware Strategy-2
                 clamp, cross-job interference blacklist, weighted fair
-                share) + RuntimePool driver and serial baseline
+                share, deadline-driven checkpoint-free preemption via
+                ``PreemptionPolicy`` — off by default) + RuntimePool
+                driver and serial baseline
   parity     -- differential check that a single-job pool reproduces
                 CorunScheduler timelines bit-for-bit
 """
 
-from repro.multitenant.job import Job, JobQueue, fairness_index
+from repro.core.strategy import PreemptionPolicy
+from repro.multitenant.job import (Job, JobQueue, downstream_critical_path,
+                                   fairness_index)
 from repro.multitenant.parity import (check_parity, compare_timelines,
                                       corun_timeline, pool_timeline,
                                       timeline_rows)
@@ -24,8 +31,8 @@ from repro.multitenant.pool import (PoolConfig, PoolResult, PoolScheduler,
                                     RuntimePool, SerialResult)
 
 __all__ = [
-    "Job", "JobQueue", "fairness_index",
-    "PlanCache",
+    "Job", "JobQueue", "downstream_critical_path", "fairness_index",
+    "PlanCache", "PreemptionPolicy",
     "PoolConfig", "PoolResult", "PoolScheduler", "RuntimePool",
     "SerialResult",
     "check_parity", "compare_timelines", "corun_timeline", "pool_timeline",

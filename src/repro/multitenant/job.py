@@ -12,6 +12,15 @@ accrues ``service`` (core-seconds actually granted) and the scheduler
 always prefers the job with the smallest ``service / priority``.  Charging
 service at launch time (not completion) makes the share responsive within
 a single scheduling instant.
+
+Deadlines (SLOs) ride on top of the static weights: a job may carry a
+``deadline`` (absolute time its owner wants it finished by), which makes
+its priority DYNAMIC — ``effective_priority`` scales the static weight up
+as slack runs out — and makes the queue order earliest-deadline-first
+within a priority level.  ``downstream_critical_path`` prices how much
+predicted work still separates each node from the job's completion, which
+is what turns a deadline into per-node slack the pool's preemption path
+can act on (see ``repro.core.strategy.PreemptionPolicy``).
 """
 
 from __future__ import annotations
@@ -33,35 +42,114 @@ class Job:
     graph: OpGraph
     priority: float = 1.0             # weight in the fair-share rule
     submit_time: float = 0.0
+    deadline: float | None = None     # absolute SLO target (None = best-effort)
     # filled at profiling/admission time
     plan: ConcurrencyPlan | None = None
     controller: ConcurrencyController | None = None
     demand: float = 0.0               # predicted core-seconds (perfmodel)
+    # uid -> predicted critical path from that node to job completion,
+    # inclusive (filled at profiling time; prices deadline slack per node)
+    cp: dict[int, float] = dataclasses.field(default_factory=dict)
     # accounting, maintained by the pool
     admit_time: float | None = None
     finish_time: float | None = None
     service: float = 0.0              # core-seconds granted so far
     ops_done: int = 0
+    preemptions: int = 0              # launches revoked from this job
 
     @property
     def done(self) -> bool:
         return self.finish_time is not None
 
     @property
-    def latency(self) -> float:
-        """Submit-to-finish (includes queueing) — the per-tenant SLO view."""
-        assert self.finish_time is not None
+    def latency(self) -> float | None:
+        """Submit-to-finish (includes queueing) — the per-tenant SLO view.
+        ``None`` until the job finishes (a rejected or still-queued tenant
+        has no latency yet; callers reporting on unfinished jobs should
+        use ``waiting_time(now)``)."""
+        if self.finish_time is None:
+            return None
         return self.finish_time - self.submit_time
 
     @property
-    def queue_wait(self) -> float:
-        assert self.admit_time is not None
+    def run_latency(self) -> float | None:
+        """Admit-to-finish — what the SCHEDULER did to the job, with the
+        admission queue factored out.  ``None`` until finished."""
+        if self.finish_time is None or self.admit_time is None:
+            return None
+        return self.finish_time - self.admit_time
+
+    @property
+    def queue_wait(self) -> float | None:
+        """Submit-to-admit, or ``None`` for a never-admitted job (deadline
+        rejection and reporting paths must not crash on those)."""
+        if self.admit_time is None:
+            return None
         return self.admit_time - self.submit_time
+
+    def waiting_time(self, now: float) -> float:
+        """Queue wait as of ``now``: submit-to-admit once admitted,
+        submit-to-now while still waiting."""
+        until = self.admit_time if self.admit_time is not None else now
+        return max(0.0, until - self.submit_time)
+
+    def slack(self, now: float) -> float | None:
+        """Raw deadline slack (no remaining-work estimate): time left
+        until the deadline, or ``None`` for best-effort jobs."""
+        if self.deadline is None:
+            return None
+        return self.deadline - now
+
+    def effective_priority(self, now: float) -> float:
+        """Dynamic priority = f(deadline slack).
+
+        Best-effort jobs keep their static weight.  A deadlined job's
+        weight scales linearly from 1x at submit to 2x at (and past) the
+        deadline, so a tenant running out of slack is progressively
+        preferred by the fair-share order without ever dominating a
+        static-priority tier above it."""
+        if self.deadline is None:
+            return self.priority
+        budget = max(self.deadline - self.submit_time, 1e-12)
+        frac = (self.deadline - now) / budget       # 1 at submit, 0 at SLO
+        return self.priority * (2.0 - min(max(frac, 0.0), 1.0))
 
     @property
     def virtual_time(self) -> float:
         """Weighted service — the fair-share ordering key (smaller = owed)."""
         return self.service / max(self.priority, 1e-9)
+
+    def virtual_time_at(self, now: float) -> float:
+        """Fair-share key under the dynamic (slack-scaled) priority.
+        Identical to ``virtual_time`` for best-effort jobs, so schedulers
+        that never set deadlines are bit-for-bit unchanged."""
+        return self.service / max(self.effective_priority(now), 1e-9)
+
+
+def downstream_critical_path(graph: OpGraph,
+                             plan: ConcurrencyPlan) -> dict[int, float]:
+    """uid -> predicted time from starting that node to finishing the job
+    (the node's own frozen-plan prediction plus the longest consumer
+    chain).  This is the remaining-work estimate that converts a job
+    deadline into per-node slack: a ready node with
+    ``deadline - now - cp[uid] <= 0`` cannot make its SLO even if granted
+    cores immediately, which is the pool's preemption trigger."""
+    pred = {uid: plan.per_instance[op.size_key].predicted_time
+            for uid, op in graph.ops.items()}
+    # reverse topological order via Kahn on consumer counts (graph uids are
+    # usually topo-ordered already, but don't rely on it)
+    out_deg = {uid: len(graph.consumers(uid)) for uid in graph.ops}
+    stack = [uid for uid, n in out_deg.items() if n == 0]
+    cp: dict[int, float] = {}
+    while stack:
+        uid = stack.pop()
+        cp[uid] = pred[uid] + max(
+            (cp[c] for c in graph.consumers(uid)), default=0.0)
+        for d in graph.ops[uid].deps:
+            out_deg[d] -= 1
+            if out_deg[d] == 0:
+                stack.append(d)
+    return cp
 
 
 class JobQueue:
@@ -75,56 +163,113 @@ class JobQueue:
     favor of a lower-priority job (no starvation by overtaking).  The cap
     is deliberately waived when the pool is idle: a job bigger than the
     cap must still run eventually, alone — otherwise it would deadlock
-    the queue."""
+    the queue.
+
+    Deadline awareness: within a priority level the queue is earliest-
+    deadline-first (best-effort jobs sort after any deadlined peer), and a
+    positive ``reservation_window`` holds the LAST active slot open for a
+    strictly-higher-priority deadlined arrival due within the window, so
+    an imminent SLO tenant doesn't find the pool freshly packed with
+    best-effort work."""
 
     def __init__(self, max_active: int = 3,
-                 max_outstanding_demand: float | None = None):
+                 max_outstanding_demand: float | None = None,
+                 reservation_window: float = 0.0):
         self.max_active = max_active
         self.max_outstanding_demand = max_outstanding_demand
-        # kept sorted by (-priority, submit_time, seq): strict priority,
-        # FIFO within a level (seq is unique, so Jobs are never compared)
-        self._waiting: list[tuple[float, float, int, Job]] = []
+        self.reservation_window = reservation_window
+        # kept sorted by (-priority, deadline, submit_time, seq): strict
+        # priority, EDF within a level (no deadline = +inf, so best-effort
+        # jobs keep FIFO among themselves), FIFO as the final tie-break
+        # (seq is unique, so Jobs are never compared)
+        self._waiting: list[tuple[float, float, float, int, Job]] = []
         self._seq = itertools.count()
         self.submitted: list[Job] = []
 
     def submit(self, job: Job) -> None:
+        deadline = job.deadline if job.deadline is not None else float("inf")
         bisect.insort(self._waiting,
-                      (-job.priority, job.submit_time, next(self._seq), job))
+                      (-job.priority, deadline, job.submit_time,
+                       next(self._seq), job))
         self.submitted.append(job)
 
     def __len__(self) -> int:
         return len(self._waiting)
 
     def peek(self) -> Job | None:
-        return self._waiting[0][3] if self._waiting else None
+        return self._waiting[0][4] if self._waiting else None
 
     def next_arrival(self, now: float) -> float | None:
         """Earliest submit_time strictly in the future, or None."""
-        future = [j.submit_time for _, _, _, j in self._waiting
+        future = [j.submit_time for *_, j in self._waiting
                   if j.submit_time > now]
         return min(future) if future else None
 
-    def pop_admissible(self, active: list[Job],
-                       now: float = float("inf")) -> Job | None:
-        """Next job to admit given the currently active set, or None.
+    def next_admissible_arrival(self, active: list[Job],
+                                now: float) -> float | None:
+        """Earliest strictly-future arrival instant at which some waiting
+        job would actually be admitted, or None.  The pool's wakeup time:
+        the EARLIEST arrival may be inadmissible (demand cap, reservation)
+        while a later one within the same op's runtime is not — that later
+        arrival still deserves its scheduling instant."""
+        future = sorted({j.submit_time for *_, j in self._waiting
+                         if j.submit_time > now})
+        for t in future:
+            if self.admissible_at(active, t):
+                return t
+        return None
 
-        Highest priority among jobs that have already arrived
-        (``submit_time <= now``); within a priority level, FIFO.  The
-        demand cap never lets a lower-priority job overtake one that is
-        merely too big — the big job waits, everything behind it waits too
-        (strict priority, no starvation by overtaking)."""
+    def _admissible_index(self, active: list[Job],
+                          now: float) -> int | None:
+        """Index into the waiting list of the job ``pop_admissible`` would
+        hand out, or None.  One predicate for both popping and the pool's
+        arrival-wakeup check, so a wakeup can never disagree with the
+        admission it is waking up for."""
         if len(active) >= self.max_active:
             return None
-        for i, (_, _, _, job) in enumerate(self._waiting):
+        for i, (*_, job) in enumerate(self._waiting):
             if job.submit_time > now:
                 continue
             if self.max_outstanding_demand is not None and active:
                 outstanding = sum(j.demand for j in active)
                 if outstanding + job.demand > self.max_outstanding_demand:
                     return None
-            self._waiting.pop(i)
-            return job
+            if (self.reservation_window > 0.0
+                    and len(active) == self.max_active - 1
+                    and self._imminent_urgent_arrival(job, now)):
+                return None
+            return i
         return None
+
+    def _imminent_urgent_arrival(self, job: Job, now: float) -> bool:
+        """Is a strictly-higher-priority deadlined job due within the
+        reservation window?  If so, the last slot is held for it."""
+        horizon = now + self.reservation_window
+        return any(h.priority > job.priority and h.deadline is not None
+                   and now < h.submit_time <= horizon
+                   for *_, h in self._waiting)
+
+    def pop_admissible(self, active: list[Job],
+                       now: float = float("inf")) -> Job | None:
+        """Next job to admit given the currently active set, or None.
+
+        Highest priority among jobs that have already arrived
+        (``submit_time <= now``); within a priority level, earliest
+        deadline first, then FIFO.  The demand cap never lets a lower-
+        priority job overtake one that is merely too big — the big job
+        waits, everything behind it waits too (strict priority, no
+        starvation by overtaking)."""
+        i = self._admissible_index(active, now)
+        if i is None:
+            return None
+        return self._waiting.pop(i)[4]
+
+    def admissible_at(self, active: list[Job], t: float) -> bool:
+        """Would ``pop_admissible(active, now=t)`` hand out a job?  The
+        pool's arrival-wakeup predicate: waking the scheduling loop for an
+        arrival that the demand cap (or a reservation) would bounce is a
+        spurious scheduling instant."""
+        return self._admissible_index(active, t) is not None
 
 
 def jain(values: list[float]) -> float:

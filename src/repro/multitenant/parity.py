@@ -42,11 +42,23 @@ def corun_timeline(graph: OpGraph, machine: SimMachine | None = None,
 
 
 def pool_timeline(graph: OpGraph, machine: SimMachine | None = None,
-                  config: RuntimeConfig | None = None) -> ScheduleResult:
-    """The same graph as the ONLY tenant of a RuntimePool."""
-    pool = RuntimePool(machine=machine or SimMachine(),
-                       config=PoolConfig(max_active=1,
-                                         runtime=config or RuntimeConfig()))
+                  config: RuntimeConfig | None = None, *,
+                  pool_config: PoolConfig | None = None) -> ScheduleResult:
+    """The same graph as the ONLY tenant of a RuntimePool.
+
+    ``pool_config`` overrides the default single-tenant pool setup, so
+    differential tests can vouch for POOL-level knobs too (e.g. a
+    preemption-enabled pool with no deadlines must still reproduce the
+    single-graph scheduler bit-for-bit).  It is exclusive with ``config``
+    — silently preferring one would let a parity test vouch for a
+    configuration it never ran."""
+    if pool_config is not None and config is not None:
+        raise ValueError("pass either config or pool_config, not both "
+                         "(set pool_config.runtime instead)")
+    if pool_config is None:
+        pool_config = PoolConfig(max_active=1,
+                                 runtime=config or RuntimeConfig())
+    pool = RuntimePool(machine=machine or SimMachine(), config=pool_config)
     job = pool.submit(graph)
     res = pool.run()
     return res.per_job_schedule(job.jid)

@@ -23,11 +23,23 @@ Service is charged at launch so the share is responsive within one
 scheduling instant; hyper-thread launches are charged at the machine's
 hyper-thread efficiency (they borrow spare lanes, not whole cores).
 
+Deadlines ride on top of fair share: a job may carry an absolute
+``deadline``, priced into per-node slack via its frozen-plan critical
+path (``Job.cp``).  The pool adds slack-expiry wakeups to the event loop
+and, when ``PoolConfig.preemption`` is enabled, the shared core's
+``try_preempt`` path may revoke the longest-remaining running op for an
+overdue tenant (``_PoolSim.revoke``: the victim node returns to its ready
+frontier, its partial run is recorded in ``preempted``, and its service
+is re-billed at the machine's restart-waste factor).  With preemption off
+AND no deadlines — the defaults — every timeline is bit-for-bit the PR-2
+pool's; deadlines alone already reorder scheduling (EDF admission, the
+slack-scaled fair-share key), preemption additionally revokes.
+
 ``RuntimePool`` is the driver: submit jobs (graph + priority + arrival
-time), run, get a ``PoolResult`` with per-job latency, fairness, and
-plan-cache amortization stats.  ``RuntimePool.run_serial`` replays the
-same job mix one graph at a time — the baseline the multitenant
-benchmarks compare against.
+time + optional deadline), run, get a ``PoolResult`` with per-job
+latency, fairness, preemption, and plan-cache amortization stats.
+``RuntimePool.run_serial`` replays the same job mix one graph at a time —
+the baseline the multitenant benchmarks compare against.
 """
 
 from __future__ import annotations
@@ -42,9 +54,11 @@ from repro.core.graph import Op, OpGraph
 from repro.core.interference import InterferenceRecorder
 from repro.core.runtime import ConcurrencyRuntime, RuntimeConfig
 from repro.core.simmachine import SimMachine
-from repro.core.strategy import (ScheduledOp, ScheduleResult, StrategyAdapter,
+from repro.core.strategy import (PreemptionPolicy, ScheduledOp,
+                                 ScheduleResult, StrategyAdapter,
                                  StrategyConfig, StrategyCore)
-from repro.multitenant.job import Job, JobQueue, fairness_index, jain
+from repro.multitenant.job import (Job, JobQueue, downstream_critical_path,
+                                   fairness_index, jain)
 from repro.multitenant.plancache import PlanCache
 
 NodeKey = tuple[int, int]           # (jid, uid)
@@ -58,6 +72,12 @@ class PoolConfig:
 
     max_active: int = 3             # admission: concurrent tenants
     max_outstanding_demand: float | None = None   # admission: core-seconds
+    # hold the last active slot for a strictly-higher-priority deadlined
+    # arrival due within this many seconds (0 = no reservation)
+    reservation_window: float = 0.0
+    # deadline-driven preemption (off by default: the differential/golden
+    # suites and every deadline-free pool are bit-for-bit unchanged)
+    preemption: PreemptionPolicy | None = None
     # fallback knobs live on RuntimeConfig (the one authoritative home,
     # shared with the single-graph scheduler); set these only to give the
     # POOL a deliberately different fallback policy
@@ -73,7 +93,8 @@ class PoolConfig:
         cfg = self.runtime.strategy_config()
         overrides = {k: v for k, v in (
             ("min_fallback_cores", self.min_fallback_cores),
-            ("fallback_slack", self.fallback_slack)) if v is not None}
+            ("fallback_slack", self.fallback_slack),
+            ("preemption", self.preemption)) if v is not None}
         return dataclasses.replace(cfg, **overrides) if overrides else cfg
 
 
@@ -93,8 +114,14 @@ class _PoolSim:
         self.heap: list[tuple[float, int, NodeKey]] = []
         self.running: dict[NodeKey, ScheduledOp] = {}
         self.records: dict[int, list[ScheduledOp]] = {}
+        # jid -> partial runs cut short by preemption (finish = revoke
+        # time); kept OUT of ``records`` so "every op exactly once"
+        # invariants keep holding on the completed timeline
+        self.preempted: dict[int, list[ScheduledOp]] = {}
         self.events: list[tuple[float, int]] = []
         self._seq = itertools.count()
+        self._live_seq: dict[NodeKey, int] = {}     # key -> heap entry seq
+        self._cancelled: set[int] = set()           # revoked heap seqs
 
     def admit(self, job: Job) -> None:
         g = job.graph
@@ -103,6 +130,7 @@ class _PoolSim:
         self.pending[job.jid] = {u: len(op.deps) for u, op in g.ops.items()}
         self.ready[job.jid] = sorted(g.sources())
         self.records[job.jid] = []
+        self.preempted[job.jid] = []
 
     def op(self, key: NodeKey) -> Op:
         return self.graphs[key[0]].ops[key[1]]
@@ -114,13 +142,40 @@ class _PoolSim:
     def launch(self, key: NodeKey, sched: ScheduledOp) -> None:
         self.ready[key[0]].remove(key[1])
         self.running[key] = sched
-        heapq.heappush(self.heap, (sched.finish, next(self._seq), key))
+        seq = next(self._seq)
+        self._live_seq[key] = seq
+        heapq.heappush(self.heap, (sched.finish, seq, key))
         self.events.append((self.clock, len(self.running)))
 
+    def revoke(self, key: NodeKey) -> ScheduledOp:
+        """Preempt a running launch: the node goes back to its job's ready
+        frontier (exactly once — it is no longer running, so no other path
+        can return it again) and the heap entry is lazily cancelled."""
+        sched = self.running.pop(key)
+        self._cancelled.add(self._live_seq.pop(key))
+        self.ready[key[0]].append(key[1])
+        self.preempted[key[0]].append(
+            dataclasses.replace(sched, finish=self.clock))
+        self.jobs[key[0]].preemptions += 1
+        self.events.append((self.clock, len(self.running)))
+        return sched
+
+    def next_finish(self) -> float | None:
+        """Earliest live completion time (revoked heap entries skipped)."""
+        while self.heap and self.heap[0][1] in self._cancelled:
+            self._cancelled.discard(self.heap[0][1])
+            heapq.heappop(self.heap)
+        return self.heap[0][0] if self.heap else None
+
     def complete_next(self) -> tuple[int, ScheduledOp]:
+        # prune revoked entries unconditionally — the heap head must be a
+        # LIVE launch before popping (an assert would be stripped by -O)
+        if self.next_finish() is None:
+            raise RuntimeError("complete_next on an empty/revoked heap")
         finish, _, key = heapq.heappop(self.heap)
         self.clock = finish
         jid, uid = key
+        self._live_seq.pop(key, None)
         sched = self.running.pop(key)
         self.records[jid].append(sched)
         for c in self.graphs[jid].consumers(uid):
@@ -146,10 +201,17 @@ class PoolResult:
     records: dict[int, list[ScheduledOp]]      # jid -> per-op records
     events: list[tuple[float, int]]            # (time, #co-running)
     cache_stats: dict[str, float]
+    # jid -> partial runs cut short by preemption (finish = revoke time)
+    preempted: dict[int, list[ScheduledOp]] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def total_ops(self) -> int:
         return sum(len(r) for r in self.records.values())
+
+    @property
+    def n_preemptions(self) -> int:
+        return sum(len(r) for r in self.preempted.values())
 
     @property
     def aggregate_throughput(self) -> float:
@@ -160,19 +222,42 @@ class PoolResult:
     def fairness(self) -> float:
         return fairness_index(self.jobs)
 
-    def slowdown_fairness(self, solo_makespans: dict[int, float]) -> float:
+    def slowdowns(self, solo_makespans: dict[int, float], *,
+                  include_queue_wait: bool = True) -> list[float]:
+        """Per-finished-job slowdown vs running alone.
+
+        ``include_queue_wait=True`` divides submit-to-finish latency by the
+        solo makespan — the tenant's end-to-end view, which charges the
+        scheduler for admission delay too.  ``False`` divides admit-to-
+        finish, isolating what the SCHEDULER did to the job once it was
+        actually inside the pool: a job that merely sat in the admission
+        queue is not evidence of unfair scheduling."""
+        out = []
+        for j in self.jobs:
+            if not j.done or j.jid not in solo_makespans:
+                continue
+            lat = j.latency if include_queue_wait else j.run_latency
+            if lat is None:
+                continue
+            out.append(lat / max(solo_makespans[j.jid], 1e-12))
+        return out
+
+    def slowdown_fairness(self, solo_makespans: dict[int, float], *,
+                          include_queue_wait: bool = True) -> float:
         """Jain index over per-job slowdown (pool latency / makespan the
         job would have alone).  Unlike cumulative-service ``fairness``,
         this measures what the scheduler DID: a tenant starved for most of
-        the run carries a large slowdown and drags the index toward 1/n."""
-        return jain([j.latency / max(solo_makespans[j.jid], 1e-12)
-                     for j in self.jobs
-                     if j.done and j.jid in solo_makespans])
+        the run carries a large slowdown and drags the index toward 1/n.
+        Report the queue-inclusive and admit-to-finish variants side by
+        side (``include_queue_wait``): a gap between them localizes the
+        unfairness to the admission tier rather than the core scheduler."""
+        return jain(self.slowdowns(solo_makespans,
+                                   include_queue_wait=include_queue_wait))
 
     @property
     def mean_latency(self) -> float:
-        done = [j for j in self.jobs if j.done]
-        return sum(j.latency for j in done) / max(len(done), 1)
+        lats = [j.latency for j in self.jobs if j.latency is not None]
+        return sum(lats) / max(len(lats), 1)
 
     def per_job_schedule(self, jid: int) -> ScheduleResult:
         """One job's records in the single-graph result type (global
@@ -221,10 +306,14 @@ class _PoolAdapter(StrategyAdapter):
 
     def ready_groups(self) -> list[Sequence[NodeKey]]:
         # jobs owed service first; only jobs with ready ops (a job with a
-        # non-empty frontier is necessarily still active)
+        # non-empty frontier is necessarily still active).  The ordering
+        # key uses the DYNAMIC (slack-scaled) priority, so a tenant whose
+        # deadline is approaching drifts toward the front of the line;
+        # for deadline-free jobs this is exactly the old static key.
+        now = self.sim.clock
         jobs = sorted((j for j in self.sim.jobs.values()
                        if self.sim.ready[j.jid]),
-                      key=lambda j: (j.virtual_time, j.jid))
+                      key=lambda j: (j.virtual_time_at(now), j.jid))
         return [[(j.jid, u) for u in self.sim.ready[j.jid]] for j in jobs]
 
     def op(self, key: NodeKey) -> Op:
@@ -263,6 +352,31 @@ class _PoolAdapter(StrategyAdapter):
         eff = (self.machine.spec.hyper_thread_efficiency
                if sched.hyper else 1.0)
         self._job(key).service += sched.threads * sched.duration * eff
+
+    # ---- deadlines / preemption ----------------------------------------
+    def deadline_slack(self, key: NodeKey) -> float | None:
+        job = self._job(key)
+        if job.deadline is None:
+            return None
+        # time to the SLO minus the node's predicted downstream critical
+        # path: <= 0 means this tenant misses its deadline even if granted
+        # cores right now — the preemption trigger
+        return job.deadline - self.sim.clock - job.cp.get(key[1], 0.0)
+
+    def revoke(self, key: NodeKey) -> ScheduledOp:
+        return self.sim.revoke(key)
+
+    def refund(self, key: NodeKey, sched: ScheduledOp,
+               elapsed: float) -> None:
+        # reverse the launch-time charge; bill the discarded partial run at
+        # the machine's restart-waste factor instead (the victim occupied
+        # cores, but the scheduler chose to throw that work away)
+        eff = (self.machine.spec.hyper_thread_efficiency
+               if sched.hyper else 1.0)
+        job = self._job(key)
+        job.service -= sched.threads * sched.duration * eff
+        job.service += (sched.threads * elapsed * eff
+                        * self.machine.spec.restart_waste)
 
 
 class PoolScheduler:
@@ -327,7 +441,8 @@ class RuntimePool:
             threshold=self.config.runtime.interference_threshold)
         self.queue = JobQueue(
             max_active=self.config.max_active,
-            max_outstanding_demand=self.config.max_outstanding_demand)
+            max_outstanding_demand=self.config.max_outstanding_demand,
+            reservation_window=self.config.reservation_window)
         self.scheduler = PoolScheduler(self.machine, self.config,
                                        recorder=self.recorder)
         self.jobs: list[Job] = []
@@ -352,12 +467,20 @@ class RuntimePool:
             p = job.plan.per_instance[op.size_key]
             demand += p.predicted_time * p.threads
         job.demand = demand
+        # per-node remaining-work estimate: prices deadline slack for the
+        # preemption path (cheap — one reverse-topo pass over frozen plans)
+        job.cp = downstream_critical_path(job.graph, job.plan)
 
     # ---- public API -----------------------------------------------------
     def submit(self, graph: OpGraph, *, priority: float = 1.0,
-               name: str | None = None, submit_time: float = 0.0) -> Job:
+               name: str | None = None, submit_time: float = 0.0,
+               deadline: float | None = None) -> Job:
+        """``deadline`` is an ABSOLUTE time (same clock as submit_time);
+        serving layers usually compute it as submit_time + latency target
+        (see ``ServeEngine.submit_waves_to_pool``)."""
         job = Job(jid=next(self._jid), name=name or graph.name, graph=graph,
-                  priority=priority, submit_time=submit_time)
+                  priority=priority, submit_time=submit_time,
+                  deadline=deadline)
         self._profile_job(job, self.plan_cache)
         self.jobs.append(job)
         self.queue.submit(job)
@@ -375,6 +498,23 @@ class RuntimePool:
                 continue
             active.append(job)
 
+    def _next_slack_expiry(self, sim: _PoolSim) -> float | None:
+        """Earliest strictly-future instant at which some admitted ready
+        node's deadline slack reaches zero — an extra scheduling instant
+        for the preemption path (slack goes negative BETWEEN completions;
+        waiting for the next op boundary is exactly the head-of-line delay
+        preemption exists to cut)."""
+        expiry = None
+        for jid, uids in sim.ready.items():
+            job = sim.jobs[jid]
+            if job.deadline is None:
+                continue
+            for uid in uids:
+                t = job.deadline - job.cp.get(uid, 0.0)
+                if t > sim.clock and (expiry is None or t < expiry):
+                    expiry = t
+        return expiry
+
     def run(self) -> PoolResult:
         sim = _PoolSim()
         active: list[Job] = []
@@ -384,6 +524,7 @@ class RuntimePool:
         # comparisons stay apples-to-apples)
         adapter = self.scheduler.adapter(sim)
         core = self.scheduler.core
+        preempting = core.config.preemption.enabled
         # freeze the cross-job interference blacklist for this pool run
         # (pairs recorded during the run bite on the next one)
         core.begin_run()
@@ -398,14 +539,31 @@ class RuntimePool:
                 continue
             core.drain(adapter)
             if sim.running:
+                nxt_fin = sim.next_finish()
+                assert nxt_fin is not None
                 # a tenant arriving before the next op completes must not
-                # wait out that op: advance to the arrival, admit, and
-                # go back to launching on whatever cores are idle
-                nxt = (self.queue.next_arrival(sim.clock)
-                       if len(self.queue) else None)
-                if (nxt is not None and nxt < sim.heap[0][0]
-                        and len(active) < self.config.max_active):
-                    sim.clock = nxt
+                # wait out that op: advance to the arrival, admit, and go
+                # back to launching on whatever cores are idle.  Only wake
+                # for arrivals the admission tier would actually accept —
+                # an arrival the demand cap bounces is not a scheduling
+                # instant (it used to wake on max_active alone), but a
+                # LATER admissible arrival behind it still gets its own
+                # instant (next_admissible_arrival scans past the blocked
+                # one).
+                wake = None
+                if len(self.queue):
+                    arr = self.queue.next_admissible_arrival(
+                        active, sim.clock)
+                    if arr is not None and arr < nxt_fin:
+                        wake = arr
+                if preempting:
+                    # also wake when an admitted tenant runs out of slack
+                    exp = self._next_slack_expiry(sim)
+                    if (exp is not None and exp < nxt_fin
+                            and (wake is None or exp < wake)):
+                        wake = exp
+                if wake is not None:
+                    sim.clock = wake
                     self._admit(sim, active)
                     continue
                 jid, _ = sim.complete_next()
@@ -417,7 +575,8 @@ class RuntimePool:
                 self._admit(sim, active)
         return PoolResult(makespan=sim.clock, jobs=list(self.jobs),
                           records=sim.records, events=sim.events,
-                          cache_stats=self.plan_cache.stats())
+                          cache_stats=self.plan_cache.stats(),
+                          preempted=sim.preempted)
 
     # ---- baseline -------------------------------------------------------
     def run_serial(self, *, share_cache: bool = False) -> SerialResult:

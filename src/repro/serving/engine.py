@@ -1,16 +1,27 @@
 """Batched serving engine: static-wave batching over a fixed slot set.
 
 Requests are queued, then served in WAVES of up to ``n_slots``: one
-batched prefill (prompts right-padded to the wave's max prompt length),
-then lock-step decode until every slot hits EOS/max_new_tokens.  Slots
-that finish early idle until the wave completes — the engine reports the
-wasted-slot fraction so the serving benchmarks can quantify it (this is
-the static-batching baseline that paged/continuous batching systems
-improve on; the simplification vs vLLM is deliberate and documented).
+batched prefill (prompts LEFT-padded to the wave's max prompt length, so
+every slot's final prompt token sits at the right edge and the wave's
+lock-step decode positions stay contiguous), then lock-step decode until
+every slot hits EOS/max_new_tokens.  Slots that finish early idle until
+the wave completes — the engine reports the wasted-slot fraction so the
+serving benchmarks can quantify it (this is the static-batching baseline
+that paged/continuous batching systems improve on; the simplification vs
+vLLM is deliberate and documented).
 
-Positions are homogeneous within a wave, matching the models' scalar
-cache["len"] semantics; correctness of prefill+decode against the full
-forward pass is covered by tests/test_models_smoke.py.
+Left-padding alone is NOT exact for shorter prompts: the models' causal
+attention has no pad mask, so the pad tokens in front would leak into a
+short prompt's logits (and shift its RoPE positions).  ``_run_wave``
+therefore re-runs one exact, unpadded prefill per distinct shorter
+prompt length — small batches at small sequence lengths — and takes each
+short request's first token from that, so prefill outputs match the
+unpadded single-request run bit-for-bit (locked by
+tests/test_substrate.py).  Decode for shorter slots still attends to the
+wave cache's pad positions — the documented static-batching
+approximation; positions are homogeneous within a wave, matching the
+models' scalar cache["len"] semantics.  Correctness of prefill+decode
+against the full forward pass is covered by tests/test_models_smoke.py.
 """
 
 from __future__ import annotations
@@ -70,31 +81,68 @@ class ServeEngine:
         self.queue.append(req)
 
     # ------------------------------------------------------------------
+    def _batch_for(self, prompts: np.ndarray) -> dict:
+        batch = {"tokens": jnp.asarray(prompts)}
+        if zoo.needs_frontend(self.cfg):
+            batch["frontend"] = jnp.zeros(
+                (prompts.shape[0], self.cfg.n_frontend_tokens,
+                 self.cfg.d_model), self.cfg.activation_dtype)
+        return batch
+
+    def _exact_short_logits(self, wave: list[Request], plen: int,
+                            tokens: np.ndarray) -> None:
+        """Overwrite ``tokens[i]`` for every request shorter than ``plen``
+        with the argmax of an exact unpadded prefill.
+
+        The batched wave prefill left-pads, and the models' causal
+        attention has no pad mask, so a short prompt's last-token logits
+        would see the leading pads (and RoPE positions shifted by the pad
+        count).  One extra prefill per distinct shorter length — a small
+        batch at a small sequence length — makes every request's first
+        generated token identical to its unpadded solo run."""
+        by_len: dict[int, list[int]] = {}
+        for i, r in enumerate(wave):
+            # zero-token requests never emit the corrected token, so an
+            # exact re-prefill for them would be a wasted forward pass
+            if len(r.prompt) < plen and r.max_new_tokens > 0:
+                by_len.setdefault(len(r.prompt), []).append(i)
+        for length, slots in by_len.items():
+            sub = np.stack([wave[i].prompt for i in slots]).astype(np.int32)
+            # only the logits are kept, so size the (discarded) cache for
+            # this sub-batch's own length, not the wave's decode budget
+            logits, _ = zoo.prefill(self.cfg, self.params,
+                                    self._batch_for(sub),
+                                    zoo.cache_max_len(self.cfg, length))
+            exact = np.asarray(jnp.argmax(logits, axis=-1))
+            for j, i in enumerate(slots):
+                tokens[i] = exact[j]
+
     def _run_wave(self, wave: list[Request]) -> None:
         t0 = time.perf_counter()
         plen = max(len(r.prompt) for r in wave)
         prompts = np.full((self.n_slots, plen), self.pad_id, np.int32)
         for i, r in enumerate(wave):
             prompts[i, plen - len(r.prompt):] = r.prompt   # left-pad
-        batch = {"tokens": jnp.asarray(prompts)}
-        if zoo.needs_frontend(self.cfg):
-            batch["frontend"] = jnp.zeros(
-                (self.n_slots, self.cfg.n_frontend_tokens,
-                 self.cfg.d_model), self.cfg.activation_dtype)
+        max_new = max(r.max_new_tokens for r in wave)
         cache_len = zoo.cache_max_len(
-            self.cfg, min(self.max_len,
-                          plen + max(r.max_new_tokens for r in wave)))
-        logits, cache = zoo.prefill(self.cfg, self.params, batch, cache_len)
-        tokens = np.asarray(jnp.argmax(logits, axis=-1))
+            self.cfg, min(self.max_len, plen + max_new))
+        logits, cache = zoo.prefill(self.cfg, self.params,
+                                    self._batch_for(prompts), cache_len)
+        tokens = np.array(jnp.argmax(logits, axis=-1))   # writable copy
+        self._exact_short_logits(wave, plen, tokens)
         for i, r in enumerate(wave):
+            if r.max_new_tokens <= 0:
+                # a request for 0 tokens gets 0 tokens — the prefill-
+                # produced token must not be appended
+                r.done = True
+                continue
             r.output.append(int(tokens[i]))
             if r.eos_id is not None and r.output[-1] == r.eos_id:
                 r.done = True
 
         steps = 0
-        useful = len(wave)
+        useful = sum(1 for r in wave if r.max_new_tokens > 0)
         pos = plen
-        max_new = max(r.max_new_tokens for r in wave)
         while steps < max_new - 1 and not all(
                 r.done or len(r.output) >= r.max_new_tokens for r in wave):
             logits, cache = self._decode(self.params, cache,
@@ -114,9 +162,13 @@ class ServeEngine:
         for r in wave:
             r.done = True
             self.finished.append(r)
+        # the prefill-produced token counts as one generation step — unless
+        # the whole wave asked for 0 tokens, in which case no slot capacity
+        # was spent generating at all
+        gen_steps = steps + (1 if max_new > 0 else 0)
         self.stats.append(WaveStats(
-            n_requests=len(wave), prompt_len=plen, decode_steps=steps + 1,
-            slot_token_capacity=self.n_slots * (steps + 1),
+            n_requests=len(wave), prompt_len=plen, decode_steps=gen_steps,
+            slot_token_capacity=self.n_slots * gen_steps,
             useful_tokens=useful, wall_s=time.perf_counter() - t0))
 
     # ------------------------------------------------------------------
@@ -142,19 +194,27 @@ class ServeEngine:
                 for i in range(0, len(reqs), self.n_slots)]
 
     def submit_waves_to_pool(self, pool, *, priority: float = 1.0,
-                             arrival_gap: float = 0.0) -> list:
+                             arrival_gap: float = 0.0,
+                             latency_target: float | None = None) -> list:
         """Submit every pending wave to a ``repro.multitenant.RuntimePool``
         as one job each (wave i arrives at ``i * arrival_gap``), so serving
         waves co-schedule against training steps and other tenants on the
-        shared machine.  Returns the created jobs; the engine's real-JAX
-        queue is left untouched."""
+        shared machine.  ``latency_target`` maps the serving SLO onto pool
+        deadlines — each wave's deadline is its arrival time plus the
+        target, which is what arms the pool's slack-aware ordering and
+        (when enabled) deadline-driven preemption for these jobs.  Returns
+        the created jobs; the engine's real-JAX queue is left untouched."""
         jobs = []
         for i, wave in enumerate(self.pending_waves()):
             g = wave_op_graph(self.cfg, wave, n_slots=self.n_slots,
                               name=f"{self.cfg.arch_id}-wave{i}")
+            submit_time = i * arrival_gap
+            deadline = (submit_time + latency_target
+                        if latency_target is not None else None)
             jobs.append(pool.submit(g, priority=priority,
                                     name=g.name,
-                                    submit_time=i * arrival_gap))
+                                    submit_time=submit_time,
+                                    deadline=deadline))
         return jobs
 
 

@@ -9,8 +9,9 @@ pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (ConcurrencyRuntime, CurveModel, GraphBuilder,
-                        HillClimbProfiler, Op, OpPlan, Placement, SimMachine,
-                        paper_case_lists, pick_admissible)
+                        HillClimbProfiler, Op, OpPlan, Placement,
+                        PreemptionPolicy, SimMachine, paper_case_lists,
+                        pick_admissible)
 from repro.hw.hlo import parse_collectives, shape_bytes
 from repro.multitenant import (PoolConfig, RuntimePool, compare_timelines,
                                corun_timeline, pool_timeline, timeline_rows)
@@ -189,6 +190,120 @@ def test_blacklisted_pair_never_overlaps_on_random_dags(graph, a, b):
             assert not (x.start < y.finish - 1e-15
                         and y.start < x.finish - 1e-15), \
                 f"blacklisted pair ({a}, {b}) co-launched"
+
+
+# ---------------------------------------------------------------------------
+# preemption invariants (deadline-driven revocation, random DAG mixes)
+# ---------------------------------------------------------------------------
+
+def _blocker_graph():
+    """Chain of very long wide ops — guarantees the random tenants behind
+    it actually experience head-of-line blocking, so the deadline path
+    (including revocation) is exercised, not just defined."""
+    b = GraphBuilder("blocker")
+    prev = None
+    for _ in range(3):
+        prev = b.add("Huge", (512, 512, 64), flops=5e12, bytes_moved=1e9,
+                     working_set=1e9, deps=[prev] if prev is not None else [])
+    return b.build()
+
+
+def _preempting_pool(graphs, deadline_scale):
+    """A long-op blocker tenant plus random DAG tenants arriving staggered
+    with deadlines tight enough (a fraction of each job's own critical
+    path) that slack pressure — and usually preemption — occurs."""
+    machine = SimMachine()
+    pool = RuntimePool(machine=machine,
+                       config=PoolConfig(
+                           max_active=4,
+                           preemption=PreemptionPolicy(enabled=True)))
+    jobs = [pool.submit(_blocker_graph(), name="blocker")]
+    for i, g in enumerate(graphs, start=1):
+        # the deadline is priced from the job's own critical path, which
+        # only exists after profiling — set it post-submit (the admission
+        # queue saw it as best-effort; slack/preemption read it live)
+        t = 1e-4 * i
+        job = pool.submit(g, name=f"j{i}", submit_time=t)
+        cp = max(job.cp.values(), default=0.0)
+        job.deadline = t + cp * deadline_scale
+        jobs.append(job)
+    return machine, pool, jobs
+
+
+@settings(**DAG_SETTINGS)
+@given(graphs=st.lists(op_graphs(), min_size=2, max_size=3),
+       scale=st.floats(0.1, 1.5))
+def test_preemption_every_op_completes_exactly_once(graphs, scale):
+    """Work conservation: a revoked victim returns to the ready frontier
+    exactly once and its op still completes exactly once; deps hold."""
+    machine, pool, jobs = _preempting_pool(graphs, scale)
+    res = pool.run()
+    for job in jobs:
+        recs = res.records[job.jid]
+        assert len(recs) == job.graph.n_ops
+        assert len({r.op.uid for r in recs}) == job.graph.n_ops
+        start = {r.op.uid: r.start for r in recs}
+        finish = {r.op.uid: r.finish for r in recs}
+        for op in job.graph.ops.values():
+            for d in op.deps:
+                assert finish[d] <= start[op.uid] + 1e-12
+        # a preempted node's final (completed) run starts at or after the
+        # instant it was revoked
+        for p in res.preempted[job.jid]:
+            assert start[p.op.uid] >= p.finish - 1e-15
+
+
+@settings(**DAG_SETTINGS)
+@given(graphs=st.lists(op_graphs(), min_size=2, max_size=3),
+       scale=st.floats(0.1, 1.5))
+def test_preemption_never_oversubscribes_cores(graphs, scale):
+    """Across every instant — including preemption instants — physical
+    core occupancy (completed runs plus revoked partial runs) stays
+    within the machine."""
+    machine, pool, jobs = _preempting_pool(graphs, scale)
+    res = pool.run()
+    spans = [(r.start, r.finish, r.threads)
+             for recs in res.records.values() for r in recs if not r.hyper]
+    spans += [(p.start, p.finish, p.threads)
+              for precs in res.preempted.values() for p in precs
+              if not p.hyper]
+    for t in sorted({t for s in spans for t in s[:2]}):
+        used = sum(th for s0, s1, th in spans if s0 <= t < s1)
+        assert used <= machine.spec.cores
+
+
+@settings(**DAG_SETTINGS)
+@given(graphs=st.lists(op_graphs(), min_size=2, max_size=3),
+       scale=st.floats(0.1, 1.5))
+def test_preemption_service_accounting_sums(graphs, scale):
+    """Launch-time charging stays consistent under revocation: service ==
+    completed core-seconds + revoked partials at the restart-waste rate."""
+    machine, pool, jobs = _preempting_pool(graphs, scale)
+    res = pool.run()
+    eff = machine.spec.hyper_thread_efficiency
+    waste = machine.spec.restart_waste
+    for job in jobs:
+        granted = sum(r.threads * r.duration * (eff if r.hyper else 1.0)
+                      for r in res.records[job.jid])
+        wasted = sum(
+            p.threads * (p.finish - p.start) * (eff if p.hyper else 1.0)
+            * waste for p in res.preempted[job.jid])
+        assert job.service == pytest.approx(granted + wasted, rel=1e-9)
+
+
+@settings(**DAG_SETTINGS)
+@given(graph=op_graphs())
+def test_preemption_enabled_without_deadlines_matches_corun(graph):
+    """The differential property survives the preemption KNOB: enabled
+    but with no deadline anywhere, a 1-job pool is still bit-identical to
+    CorunScheduler on arbitrary DAGs (nothing can go overdue)."""
+    single = corun_timeline(graph, SimMachine(seed=0))
+    pooled = pool_timeline(
+        graph, SimMachine(seed=0),
+        pool_config=PoolConfig(max_active=1,
+                               preemption=PreemptionPolicy(enabled=True)))
+    assert single.makespan == pooled.makespan
+    assert not compare_timelines(timeline_rows(single), timeline_rows(pooled))
 
 
 @settings(**SETTINGS)

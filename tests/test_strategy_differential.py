@@ -67,6 +67,23 @@ class TestSingleJobPoolParity:
         pooled = pool_timeline(graph, SimMachine(seed=7))
         _assert_identical(single, pooled)
 
+    @pytest.mark.parametrize("model", ["resnet50", "dcgan"])
+    def test_preemption_enabled_but_inert_is_bit_identical(self, model):
+        """A preemption-ENABLED pool whose jobs carry no deadlines can
+        never accumulate negative slack, so it must reproduce the
+        single-graph scheduler bit-for-bit — the knob alone changes
+        nothing, only deadline pressure does."""
+        from repro.core.strategy import PreemptionPolicy
+
+        graph = build_paper_graph(model)
+        single = corun_timeline(graph, SimMachine(seed=0))
+        pooled = pool_timeline(
+            graph, SimMachine(seed=0),
+            pool_config=PoolConfig(
+                max_active=1,
+                preemption=PreemptionPolicy(enabled=True)))
+        _assert_identical(single, pooled)
+
     def test_check_parity_report_shape(self):
         report = check_parity(["dcgan"])
         assert report["ok"] is True

@@ -245,3 +245,54 @@ class TestServing:
                 max_new_tokens=3 + i))
         eng.run()
         assert 0.0 < eng.mean_slot_utilization <= 1.0
+
+    def test_mixed_length_prefill_matches_unpadded_run(self):
+        """The wave prefill left-pads, and the models' causal attention
+        has no pad mask — so a shorter request's first generated token
+        must come from the per-length exact prefill, identical to running
+        that request alone, unpadded."""
+        cfg, _ = self._engine()
+        rng = np.random.default_rng(7)
+        prompts = [rng.integers(1, cfg.vocab, n).astype(np.int32)
+                   for n in (3, 6, 10)]
+        solo_tokens = []
+        for p in prompts:
+            _, solo = self._engine(n_slots=1)
+            solo.submit(Request(rid=0, prompt=p.copy(), max_new_tokens=1))
+            solo_tokens.append(solo.run()[0].output[0])
+        _, eng = self._engine(n_slots=3)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=1))
+        done = {r.rid: r for r in eng.run()}
+        for i, tok in enumerate(solo_tokens):
+            assert done[i].output == [tok], \
+                f"prompt {i} (len {len(prompts[i])}) diverged from solo run"
+
+    def test_zero_max_new_tokens_gets_zero_tokens(self):
+        cfg, eng = self._engine(n_slots=2)
+        rng = np.random.default_rng(2)
+        eng.submit(Request(rid=0,
+                           prompt=rng.integers(1, cfg.vocab, 5).astype(
+                               np.int32),
+                           max_new_tokens=0))
+        eng.submit(Request(rid=1,
+                           prompt=rng.integers(1, cfg.vocab, 8).astype(
+                               np.int32),
+                           max_new_tokens=3))
+        done = {r.rid: r for r in eng.run()}
+        assert done[0].output == []            # asked for 0, got 0
+        assert len(done[1].output) == 3
+        # useful_tokens must not count the suppressed prefill token
+        assert eng.stats[0].useful_tokens == 3
+
+    def test_all_zero_wave_spends_no_slot_capacity(self):
+        cfg, eng = self._engine(n_slots=2)
+        for i in range(2):
+            eng.submit(Request(rid=i,
+                               prompt=np.arange(1, 5, dtype=np.int32),
+                               max_new_tokens=0))
+        done = eng.run()
+        assert all(r.output == [] for r in done)
+        assert eng.stats[0].decode_steps == 0
+        assert eng.stats[0].slot_token_capacity == 0
+        assert eng.stats[0].useful_tokens == 0
