@@ -1,0 +1,103 @@
+"""Topology-aware placement benchmarks (one function per headline claim).
+
+Row convention matches benchmarks/run.py: ``name,us_per_call,derived``.
+
+Scenario: the PR-1/PR-2 4-job training mix run twice through identically
+configured pools — ``topology="flat"`` (the paper's 68-core pool, bit-
+for-bit the pre-topology scheduler) and ``topology="quadrant"`` (every
+launch books a concrete core set; bandwidth shares computed from actual
+quadrant co-residents).
+
+Claims measured:
+
+* ``numa_quadrant_vs_flat`` — quadrant placement's aggregate throughput
+  on the 4-job mix is at least flat's (the asserted speedup floor: the
+  placement policy spends its locality boost where co-runs used to pay
+  all-to-all interleaving waste, and the spill penalty never exceeds the
+  win on this mix).
+* ``numa_placement_locality`` — how well the policy separates tenants:
+  the share of launches that stayed inside a single quadrant, and the
+  straddle histogram (quadrants touched per launch).
+"""
+
+from __future__ import annotations
+
+from repro.core import SimMachine, build_paper_graph
+from repro.multitenant import PoolConfig, RuntimePool
+
+MACHINE = SimMachine()
+
+MIX = [("resnet50", 1.0), ("dcgan", 1.0), ("resnet50", 2.0), ("dcgan", 1.0)]
+
+_RESULTS = None
+
+
+def _run_pool(topology: str | None):
+    pool = RuntimePool(machine=MACHINE,
+                       config=PoolConfig(max_active=3, topology=topology))
+    for i, (model, prio) in enumerate(MIX):
+        pool.submit(build_paper_graph(model), priority=prio,
+                    name=f"{model}-{i}")
+    return pool.run()
+
+
+def _results():
+    global _RESULTS
+    if _RESULTS is None:
+        _RESULTS = (_run_pool(None), _run_pool("quadrant"))
+    return _RESULTS
+
+
+def numa_quadrant_vs_flat() -> list[str]:
+    flat, quad = _results()
+    ratio = quad.aggregate_throughput / flat.aggregate_throughput
+    rows = [
+        f"numa/flat_makespan,{flat.makespan*1e6:.1f},"
+        f"thpt={flat.aggregate_throughput:.1f}ops/s",
+        f"numa/quadrant_makespan,{quad.makespan*1e6:.1f},"
+        f"thpt={quad.aggregate_throughput:.1f}ops/s",
+        f"numa/quadrant_vs_flat,{quad.makespan*1e6:.1f},"
+        f"speedup={ratio:.3f}x",
+    ]
+    assert ratio >= 1.0, (
+        "quadrant placement must not lose to flat on the 4-job mix "
+        f"(ratio {ratio:.3f})")
+    return rows
+
+
+def numa_placement_locality() -> list[str]:
+    _, quad = _results()
+    spec = MACHINE.spec
+    histogram: dict[int, int] = {}
+    placed = 0
+    for recs in quad.records.values():
+        for r in recs:
+            if r.hyper:
+                continue
+            placed += 1
+            n = len({spec.quadrant_of_core(c) for c in r.cores})
+            histogram[n] = histogram.get(n, 0) + 1
+    local = histogram.get(1, 0)
+    rows = [
+        f"numa/quadrant_local_launches,{local},"
+        f"of={placed}({100.0*local/max(placed,1):.0f}%)",
+    ]
+    for n in sorted(histogram):
+        rows.append(f"numa/straddle_{n}q,{histogram[n]},launches")
+    # every placed launch books exactly its width in unique cores — the
+    # bench doubles as a cheap placement-integrity check in CI
+    for recs in quad.records.values():
+        for r in recs:
+            if not r.hyper:
+                assert len(set(r.cores)) == r.threads
+    assert local > 0, "placement never packed a launch quadrant-locally"
+    return rows
+
+
+ALL = [numa_quadrant_vs_flat, numa_placement_locality]
+
+
+if __name__ == "__main__":
+    for fn in ALL:
+        for row in fn():
+            print(row)

@@ -28,17 +28,21 @@ def run_parity_check() -> None:
 
 
 def main() -> None:
-    from benchmarks import kernel_bench, multitenant_bench, paper_tables, \
-        preemption_bench, roofline
+    from benchmarks import kernel_bench, multitenant_bench, numa_bench, \
+        paper_tables, preemption_bench, roofline
     fns = (list(paper_tables.ALL) + list(kernel_bench.ALL)
            + list(roofline.ALL) + list(multitenant_bench.ALL)
-           + list(preemption_bench.ALL))
+           + list(preemption_bench.ALL) + list(numa_bench.ALL))
     args = [a for a in sys.argv[1:] if a != "--check-parity"]
     parity = "--check-parity" in sys.argv[1:]
     only = args[0] if args else None
     print("name,us_per_call,derived")
     if parity:
         run_parity_check()
+        if only is None:
+            # bare --check-parity = the cheap flat-topology differential
+            # smoke (PR fast lane): parity rows only, no benches
+            return
     for fn in fns:
         if only and only not in fn.__name__:
             continue

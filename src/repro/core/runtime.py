@@ -45,6 +45,7 @@ class RuntimeConfig:
     interference_threshold: float = 1.35
     min_fallback_cores: int = 4     # run-biggest fallback floor
     fallback_slack: float = 1.25    # fallback horizon slack
+    topology: str = "flat"          # "flat" | "quadrant" placement
 
     def strategy_config(self) -> StrategyConfig:
         """The shared-core view of these knobs (see repro.core.strategy).
@@ -55,7 +56,8 @@ class RuntimeConfig:
             candidates=self.candidates,
             max_ht_corunners=self.max_ht_corunners,
             min_fallback_cores=self.min_fallback_cores,
-            fallback_slack=self.fallback_slack)
+            fallback_slack=self.fallback_slack,
+            topology=self.topology)
 
 
 @dataclasses.dataclass
@@ -149,7 +151,8 @@ class ConcurrencyRuntime:
             max_ht_corunners=cfg.max_ht_corunners,
             candidates=cfg.candidates,
             min_fallback_cores=cfg.min_fallback_cores,
-            fallback_slack=cfg.fallback_slack)
+            fallback_slack=cfg.fallback_slack,
+            topology=cfg.topology)
 
     def execute_step(self, graph: OpGraph) -> ScheduleResult:
         if self.plan is None:

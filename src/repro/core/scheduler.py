@@ -101,11 +101,14 @@ class _GraphAdapter(StrategyAdapter):
     against the graph's own frozen plan/controller."""
 
     def __init__(self, sim: _EventSim, controller: ConcurrencyController,
-                 plan: ConcurrencyPlan, *, strategy2: bool):
+                 plan: ConcurrencyPlan, *, strategy2: bool,
+                 spec=None):
         self.sim = sim
         self.controller = controller
         self.plan = plan
         self.strategy2 = strategy2
+        self._spec = spec
+        self._last_quadrant: int | None = None
 
     @property
     def clock(self) -> float:
@@ -143,6 +146,19 @@ class _GraphAdapter(StrategyAdapter):
         self.sim.ready.remove(key)
         self.sim.launch(key, sched)
 
+    def charge(self, key: int, sched: ScheduledOp) -> None:
+        # no service accounting for a single graph, but the same quadrant
+        # affinity the pool keeps per tenant (primary quadrant of the last
+        # placed launch) — one graph is one tenant, and the single-job
+        # pool must stay bit-identical to this scheduler under EVERY
+        # topology, so both adapters must answer placement_hint alike
+        if sched.cores and self._spec is not None:
+            self._last_quadrant = self._spec.quadrant_of_core(
+                sched.cores[0])
+
+    def placement_hint(self, key: int) -> int | None:
+        return self._last_quadrant
+
 
 class CorunScheduler:
     """Thin single-graph adapter over ``StrategyCore``."""
@@ -154,7 +170,7 @@ class CorunScheduler:
                  enable_s3: bool = True, enable_s4: bool = True,
                  strategy2: bool = True, max_ht_corunners: int = 2,
                  candidates: int = 3, min_fallback_cores: int = 4,
-                 fallback_slack: float = 1.25):
+                 fallback_slack: float = 1.25, topology: str = "flat"):
         self.machine = machine
         self.controller = controller
         self.plan = plan
@@ -165,7 +181,8 @@ class CorunScheduler:
                            candidates=candidates,
                            max_ht_corunners=max_ht_corunners,
                            min_fallback_cores=min_fallback_cores,
-                           fallback_slack=fallback_slack),
+                           fallback_slack=fallback_slack,
+                           topology=topology),
             recorder=recorder, total_cores=total_cores)
 
     @property
@@ -178,7 +195,8 @@ class CorunScheduler:
 
     def adapter(self, sim: _EventSim) -> _GraphAdapter:
         return _GraphAdapter(sim, self.controller, self.plan,
-                             strategy2=self.strategy2)
+                             strategy2=self.strategy2,
+                             spec=self.machine.spec)
 
     # ------------------------------------------------------------------
     def run(self, graph: OpGraph) -> ScheduleResult:

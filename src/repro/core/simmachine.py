@@ -91,6 +91,52 @@ class SimMachine:
         total = threads + sum(co_running_threads)
         return max(0.25, threads / max(total, 1))
 
+    def quadrant_bw_share(
+            self, cores: tuple[int, ...],
+            co_running: Iterable[tuple[int, tuple[int, ...]]]) -> float:
+        """Topology-aware replacement for ``corun_bw_share``: bandwidth
+        fraction of a launch PLACED on concrete core ids, next to
+        co-runners given as ``(threads, cores)`` pairs.
+
+        MCDRAM pages stay interleaved machine-wide (quadrant clustering
+        localizes the tag directory, not the memory), so the BASE share is
+        the same fair split as the flat rule — a solo launch gets 1.0
+        whatever its placement.  The topology modulates the base per
+        thread: a thread in a quadrant no co-runner occupies keeps its
+        directory traffic home and recovers the all-to-all conflict waste
+        (``spec.quadrant_local_boost``, calibrated to the paper's Table
+        III core-partitioning gain), while a thread in a CONTESTED
+        quadrant — one that co-runners also occupy — pays
+        ``spec.cross_quadrant_penalty``, the cross-quadrant co-run the
+        placement policy exists to avoid.  The blend is the per-core
+        weighted mean, so the share degrades smoothly with how much of
+        the launch overlaps foreign traffic.  Unplaced co-runners
+        (hyper-thread-lane launches) count toward the fair split — their
+        streams are real — but contest no quadrant: they have no pinned
+        placement, just time-sliced spare HW threads at 0.55 efficiency,
+        so they don't drag a placed launch's directory traffic off its
+        home quadrant."""
+        spec = self.spec
+        mine: dict[int, int] = {}
+        for c in cores:
+            q = spec.quadrant_of_core(c)
+            mine[q] = mine.get(q, 0) + 1
+        my_threads = len(cores)
+        other_threads = 0
+        contested: set[int] = set()
+        for threads, other in co_running:
+            other_threads += len(other) if other else threads
+            if other:
+                contested |= ({spec.quadrant_of_core(c) for c in other}
+                              & set(mine))
+        share = max(0.25, my_threads / max(my_threads + other_threads, 1))
+        locality = sum(
+            (m / my_threads) * (spec.cross_quadrant_penalty
+                                if q in contested
+                                else spec.quadrant_local_boost)
+            for q, m in mine.items()) if my_threads else 1.0
+        return min(1.0, share * locality)
+
     def op_time(self, op: Op, placement: Placement, *,
                 bw_share: float = 1.0) -> float:
         """Seconds to execute ``op`` under ``placement``.

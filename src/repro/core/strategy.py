@@ -54,6 +54,8 @@ from typing import Callable, Hashable, Iterable, Mapping, Sequence
 from repro.core.concurrency import OpPlan
 from repro.core.graph import Op
 from repro.core.interference import InterferenceRecorder, _pair_key
+from repro.core.placement import (REL_ANY, REL_CROSS, REL_LOCAL,
+                                  place, placement_relation, quadrants_of)
 from repro.core.simmachine import Placement, SimMachine
 
 NodeKey = Hashable            # int (uid) or (jid, uid) — opaque to the core
@@ -68,6 +70,10 @@ class ScheduledOp:
     start: float
     finish: float
     predicted: float
+    # concrete core ids under topology="quadrant"; empty for flat topology
+    # and for hyper-thread-lane launches (they borrow busy cores' spare HW
+    # threads machine-wide rather than booking physical cores)
+    cores: tuple[int, ...] = ()
 
     @property
     def duration(self) -> float:
@@ -152,6 +158,14 @@ class StrategyConfig:
     min_fallback_cores: int = 4      # don't squeeze the fallback op
     fallback_slack: float = 1.25     # horizon slack for the fallback launch
     preemption: PreemptionPolicy = PreemptionPolicy()
+    # "flat": the paper's 68-core pool — no placement, global bw shares,
+    # bit-for-bit the pre-topology scheduler (locked by the differential/
+    # golden suites).  "quadrant": placement is a scheduling decision —
+    # every non-hyper launch books a concrete core set (empty quadrant
+    # first, then quadrant-local packing, then bounded spill), bw shares
+    # are computed from actual quadrant co-residents, and interference is
+    # recorded per placement relation (local vs cross-quadrant).
+    topology: str = "flat"
 
 
 class StrategyAdapter(abc.ABC):
@@ -215,6 +229,13 @@ class StrategyAdapter(abc.ABC):
     def charge(self, key: NodeKey, sched: ScheduledOp) -> None:
         """Post-launch accounting hook (pool: weighted fair share)."""
 
+    def placement_hint(self, key: NodeKey) -> int | None:
+        """Preferred quadrant for the node's launch under
+        ``topology="quadrant"`` (pool: the tenant's last-used quadrant, so
+        a job's ops keep landing where its working set already lives).
+        ``None`` means no affinity; flat topology never consults this."""
+        return None
+
     # ---- deadlines / preemption (optional) -----------------------------
     def deadline_slack(self, key: NodeKey) -> float | None:
         """Deadline slack of the node's tenant at this instant: time left
@@ -272,36 +293,103 @@ class StrategyCore:
         solo prediction by construction) serialize the machine mid-run."""
         self._blacklist = self.recorder.blacklist()
 
-    def _compatible(self, op_class: str, running_classes: list[str]) -> bool:
+    def _blacklisted_pair(self, a: str, b: str, relation: str) -> bool:
         if self._blacklist is None:        # no snapshot: live recorder view
-            return self.recorder.compatible(op_class, running_classes)
-        return not any(_pair_key(op_class, r) in self._blacklist
-                       for r in running_classes)
+            return self.recorder.blacklisted(a, b, relation)
+        return _pair_key(a, b) + (relation,) in self._blacklist
+
+    def _compat_relations(self, hyper: bool) -> tuple[str, ...]:
+        """Which blacklist relations make a pair HARD-incompatible.
+
+        Flat topology has one bucket.  Under quadrant topology an "any"
+        entry (pre-seeded or carried over from a flat run) and a "local"
+        entry (the pair interferes even placed in disjoint quadrants —
+        a true global-bandwidth conflict) always forbid the co-run; a
+        "cross"-only entry does NOT — the pair is re-admitted as long as
+        placement keeps their quadrants disjoint (see
+        ``_placement_avoid``).  A hyper-thread launch rides busy cores
+        machine-wide, so every co-run it joins IS a cross-quadrant one
+        and the cross relation turns hard for it."""
+        if self.config.topology != "quadrant":
+            return (REL_ANY,)
+        return (REL_ANY, REL_LOCAL, REL_CROSS) if hyper \
+            else (REL_ANY, REL_LOCAL)
+
+    def _compatible(self, op_class: str, running_classes: list[str],
+                    hyper: bool = False) -> bool:
+        rels = self._compat_relations(hyper)
+        return not any(self._blacklisted_pair(op_class, r, rel)
+                       for r in running_classes for rel in rels)
+
+    def _placement_avoid(self, op_class: str,
+                         adapter: StrategyAdapter) -> frozenset[int] | None:
+        """Quadrants the launch must stay out of: those occupied by
+        runners whose class pair is blacklisted under the CROSS relation
+        (they may still co-run quadrant-LOCALLY — the whole point of
+        splitting the recorder key).  ``None`` = no feasible placement at
+        all: a cross-blacklisted co-runner with no placement (hyper lane)
+        rides every quadrant, so no core set can dodge it."""
+        if self.config.topology != "quadrant":
+            return frozenset()
+        avoid: set[int] = set()
+        for r in adapter.running.values():
+            if self._blacklisted_pair(op_class, r.op.op_class, REL_CROSS):
+                if not r.cores:
+                    return None
+                avoid |= quadrants_of(self.machine.spec, r.cores)
+        return frozenset(avoid)
+
+    def _place(self, adapter: StrategyAdapter, key: NodeKey, plan: OpPlan,
+               avoid: frozenset[int]) -> tuple[int, ...] | None:
+        """Concrete core set for a non-hyper launch (empty tuple under
+        flat topology — placement stays out of the flat scheduler
+        entirely, preserving bit-for-bit parity)."""
+        if self.config.topology != "quadrant":
+            return ()
+        busy = frozenset(c for r in adapter.running.values()
+                         for c in r.cores)
+        return place(self.machine.spec, plan.threads, busy,
+                     cache_sharing=plan.variant,
+                     prefer=adapter.placement_hint(key), avoid=avoid)
 
     def free(self, adapter: StrategyAdapter) -> int:
         return free_cores(adapter.running.values(), self.cores)
 
     def _duration(self, op: Op, plan: OpPlan, hyper: bool,
-                  adapter: StrategyAdapter) -> float:
+                  adapter: StrategyAdapter,
+                  cores: tuple[int, ...] = ()) -> float:
         pl = Placement(plan.threads, cache_sharing=plan.variant,
                        hyper_thread=hyper)
-        share = self.bw_share(
-            plan.threads, (r.threads for r in adapter.running.values()))
+        if cores:
+            # topology-aware contention: share computed from the actual
+            # quadrant co-residents, not the flat global pool
+            share = self.machine.quadrant_bw_share(
+                cores, [(r.threads, r.cores)
+                        for r in adapter.running.values()])
+        else:
+            share = self.bw_share(
+                plan.threads, (r.threads for r in adapter.running.values()))
         return self.machine.op_time(op, pl, bw_share=share)
 
     def launch(self, adapter: StrategyAdapter, key: NodeKey, plan: OpPlan,
-               hyper: bool) -> ScheduledOp:
+               hyper: bool, cores: tuple[int, ...] = ()) -> ScheduledOp:
         op = adapter.op(key)
-        dur = self._duration(op, plan, hyper, adapter)
+        dur = self._duration(op, plan, hyper, adapter, cores)
         sched = ScheduledOp(op=op, threads=plan.threads, variant=plan.variant,
                             hyper=hyper, start=adapter.clock,
                             finish=adapter.clock + dur,
-                            predicted=plan.predicted_time)
+                            predicted=plan.predicted_time, cores=cores)
         # interference bookkeeping: observed co-run duration vs solo model,
         # keyed by class pair (the machine doesn't care who launched what)
+        # plus, under quadrant topology, the pair's placement relation —
+        # a cross-quadrant slowdown must not blacklist quadrant-local
+        # co-runs of the same classes
+        quadrant = self.config.topology == "quadrant"
         for other in adapter.running.values():
+            rel = (placement_relation(self.machine.spec, cores, other.cores)
+                   if quadrant else REL_ANY)
             self.recorder.record(op.op_class, other.op.op_class,
-                                 plan.predicted_time, dur)
+                                 plan.predicted_time, dur, relation=rel)
         adapter.commit(key, sched)
         adapter.charge(key, sched)
         return sched
@@ -325,6 +413,9 @@ class StrategyCore:
                 op = adapter.op(key)
                 if not self._compatible(op.op_class, running_classes):
                     continue
+                avoid = self._placement_avoid(op.op_class, adapter)
+                if avoid is None:
+                    continue
                 cands = adapter.candidates_for(key, self.config.candidates)
                 pick = pick_admissible(cands, free, horizon)
                 if pick is None:
@@ -332,7 +423,10 @@ class StrategyCore:
                 pick = adapter.clamp(key, pick)
                 if pick.threads > free:
                     continue
-                self.launch(adapter, key, pick, hyper=False)
+                cores = self._place(adapter, key, pick, avoid)
+                if cores is None:
+                    continue
+                self.launch(adapter, key, pick, hyper=False, cores=cores)
                 return True
         return False
 
@@ -375,7 +469,13 @@ class StrategyCore:
                               adapter.predict(key, free, plan.variant))
             if plan.predicted_time > horizon * self.config.fallback_slack:
                 continue
-            self.launch(adapter, key, plan, hyper=False)
+            avoid = self._placement_avoid(adapter.op(key).op_class, adapter)
+            if avoid is None:
+                continue
+            cores = self._place(adapter, key, plan, avoid)
+            if cores is None:
+                continue
+            self.launch(adapter, key, plan, hyper=False, cores=cores)
             return True
         return False
 
@@ -399,7 +499,10 @@ class StrategyCore:
                  for i, k in enumerate(group)]
         for _, _, _, key in sorted(keyed, key=lambda t: t[:3]):
             op = adapter.op(key)
-            if not self._compatible(op.op_class, running_classes):
+            # a hyper launch borrows busy cores machine-wide: every co-run
+            # it joins is cross-quadrant, so the cross relation is hard
+            if not self._compatible(op.op_class, running_classes,
+                                    hyper=True):
                 continue
             inst = adapter.instance_plan(key)
             plan = OpPlan(min(inst.threads, self.cores), inst.variant,
@@ -514,7 +617,15 @@ class StrategyCore:
         if pick.threads > free:
             pick = OpPlan(free, pick.variant,
                           adapter.predict(key, free, pick.variant))
-        self.launch(adapter, key, pick, hyper=False)
+        # quadrant placement for the claimed launch: the cross-relation
+        # avoid set is ADVISORY here — a blown SLO outranks re-observing a
+        # cross-quadrant slowdown, and the victim is already revoked, so
+        # when avoidance leaves too few cores the launch lands anyway
+        avoid = self._placement_avoid(op.op_class, adapter) or frozenset()
+        cores = self._place(adapter, key, pick, avoid)
+        if cores is None:
+            cores = self._place(adapter, key, pick, frozenset())
+        self.launch(adapter, key, pick, hyper=False, cores=cores)
         return True
 
     # ---- the launch fixpoint loop --------------------------------------

@@ -42,6 +42,13 @@ def main() -> None:
     ap.add_argument("--reservation-window", type=float, default=0.0,
                     help="hold the last active slot for a higher-priority "
                          "deadlined arrival due within this many seconds")
+    ap.add_argument("--topology", choices=("flat", "quadrant"),
+                    default="flat",
+                    help="thread placement: 'flat' is the paper's 68-core "
+                         "pool; 'quadrant' books concrete core sets "
+                         "(empty quadrant first, quadrant-local packing, "
+                         "bounded spill) with per-quadrant bandwidth "
+                         "contention and tenant-to-quadrant affinity")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scale", type=int, default=1,
                     help="layer-count multiplier for every job graph")
@@ -81,6 +88,7 @@ def main() -> None:
         config=PoolConfig(
             max_active=args.max_active,
             reservation_window=args.reservation_window,
+            topology=(args.topology if args.topology != "flat" else None),
             preemption=(PreemptionPolicy(enabled=True)
                         if args.preempt else None)))
     for i, (model, prio, budget) in enumerate(zip(models, prios, budgets)):
@@ -109,6 +117,7 @@ def main() -> None:
                                  and j.finish_time <= j.deadline)}
                if j.deadline is not None else {}),
         } for j in res.jobs],
+        "topology": args.topology,
         "pool_makespan_s": res.makespan,
         "serial_makespan_s": serial.makespan,
         "aggregate_speedup": serial.makespan / res.makespan,

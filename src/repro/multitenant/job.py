@@ -56,6 +56,9 @@ class Job:
     service: float = 0.0              # core-seconds granted so far
     ops_done: int = 0
     preemptions: int = 0              # launches revoked from this job
+    # quadrant of the job's most recent placed launch (topology="quadrant"
+    # only) — the pool's tenant-to-quadrant affinity hint
+    last_quadrant: int | None = None
 
     @property
     def done(self) -> bool:

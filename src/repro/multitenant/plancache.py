@@ -31,13 +31,24 @@ class PlanCache:
     """Shared cross_graph_key(op) -> CurveModel store with accounting.
 
     Key with ``repro.core.perfmodel.cross_graph_key`` (the op's full
-    analytic profile), NOT ``op.size_key`` — see the module docstring."""
+    analytic profile), NOT ``op.size_key`` — see the module docstring.
+
+    ``max_entries`` bounds the cache (the ROADMAP's "unbounded today"
+    item): beyond the bound the least-recently-USED curve is evicted —
+    dict insertion order doubles as the LRU list, with every hit
+    reinserting its key at the back.  An evicted curve is simply
+    re-measured on its next miss, so eviction never changes results,
+    only probe counts (``evictions`` tracks how often that price was
+    paid)."""
 
     curves: dict[Hashable, CurveModel] = dataclasses.field(
         default_factory=dict)
+    max_entries: int | None = None   # None = unbounded (the old behavior)
     hits: int = 0
     misses: int = 0
     probes_saved: int = 0       # probes a hit avoided re-paying
+    evictions: int = 0          # LRU evictions (bounded caches only)
+    probes_evicted: int = 0     # probes paid for curves later evicted
     machine_fingerprint: Hashable | None = None
 
     def bind_machine(self, fingerprint: Hashable) -> None:
@@ -63,16 +74,32 @@ class PlanCache:
             return None
         self.hits += 1
         self.probes_saved += curve.probes
+        # refresh LRU position: pop + reinsert moves the key to the back
+        del self.curves[key]
+        self.curves[key] = curve
         return curve
 
     def insert(self, key: Hashable, curve: CurveModel) -> None:
+        self.curves.pop(key, None)        # reinsertion refreshes recency
         self.curves[key] = curve
+        if self.max_entries is not None:
+            while len(self.curves) > self.max_entries:
+                oldest = next(iter(self.curves))
+                # the evicted curve's probes were really measured; keep
+                # them in probes_spent so eviction (which forces a future
+                # re-measure) can never make the cache LOOK cheaper
+                self.probes_evicted += self.curves[oldest].probes
+                del self.curves[oldest]
+                self.evictions += 1
 
     # ---- accounting ---------------------------------------------------
     @property
     def probes_spent(self) -> int:
-        """Probes actually measured (each distinct curve paid once)."""
-        return sum(c.probes for c in self.curves.values())
+        """Probes actually measured: every resident curve's cost plus the
+        cost of curves measured and later evicted (an evicted curve that
+        re-misses is re-measured, and both payments count)."""
+        return (sum(c.probes for c in self.curves.values())
+                + self.probes_evicted)
 
     @property
     def hit_rate(self) -> float:
@@ -87,4 +114,5 @@ class PlanCache:
             "hit_rate": self.hit_rate,
             "probes_spent": self.probes_spent,
             "probes_saved": self.probes_saved,
+            "evictions": self.evictions,
         }

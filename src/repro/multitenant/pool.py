@@ -83,6 +83,11 @@ class PoolConfig:
     # POOL a deliberately different fallback policy
     min_fallback_cores: int | None = None
     fallback_slack: float | None = None
+    # topology-aware placement ("flat" | "quadrant"); like the fallback
+    # knobs this defaults to the RuntimeConfig setting and overrides only
+    # when explicitly set, so flat pools stay bit-identical to the
+    # single-graph scheduler
+    topology: str | None = None
     runtime: RuntimeConfig = dataclasses.field(default_factory=RuntimeConfig)
 
     def strategy_config(self) -> StrategyConfig:
@@ -94,6 +99,7 @@ class PoolConfig:
         overrides = {k: v for k, v in (
             ("min_fallback_cores", self.min_fallback_cores),
             ("fallback_slack", self.fallback_slack),
+            ("topology", self.topology),
             ("preemption", self.preemption)) if v is not None}
         return dataclasses.replace(cfg, **overrides) if overrides else cfg
 
@@ -150,7 +156,11 @@ class _PoolSim:
     def revoke(self, key: NodeKey) -> ScheduledOp:
         """Preempt a running launch: the node goes back to its job's ready
         frontier (exactly once — it is no longer running, so no other path
-        can return it again) and the heap entry is lazily cancelled."""
+        can return it again) and the heap entry is lazily cancelled.
+        Under quadrant topology the victim's core set is released at this
+        instant by construction: placement derives occupancy from the
+        running set, which no longer contains the victim (its partial
+        record in ``preempted`` keeps the cores for occupancy audits)."""
         sched = self.running.pop(key)
         self._cancelled.add(self._live_seq.pop(key))
         self.ready[key[0]].append(key[1])
@@ -351,7 +361,17 @@ class _PoolAdapter(StrategyAdapter):
         # weighted fair share: charge core-seconds at launch time
         eff = (self.machine.spec.hyper_thread_efficiency
                if sched.hyper else 1.0)
-        self._job(key).service += sched.threads * sched.duration * eff
+        job = self._job(key)
+        job.service += sched.threads * sched.duration * eff
+        if sched.cores:
+            # tenant-to-quadrant affinity: remember where the job landed
+            # (the primary quadrant — placement fills it first) so its
+            # next launches prefer the quadrant its working set warms
+            job.last_quadrant = self.machine.spec.quadrant_of_core(
+                sched.cores[0])
+
+    def placement_hint(self, key: NodeKey) -> int | None:
+        return self._job(key).last_quadrant
 
     # ---- deadlines / preemption ----------------------------------------
     def deadline_slack(self, key: NodeKey) -> float | None:

@@ -623,6 +623,57 @@ class TestPoolVsSerial:
         assert cache.probes_spent == single_job_probes   # second job free
         assert cache.hit_rate > 0.0
 
+    def test_plancache_lru_bound_evicts_oldest(self):
+        """The ROADMAP "unbounded today" item: max_entries evicts in LRU
+        order (hits refresh recency), counts evictions, and an evicted
+        curve simply re-misses — no wrong answers, only re-paid probes."""
+        from repro.core import CurveModel
+        curve = lambda: CurveModel(samples={False: [(1, 1.0)]},  # noqa: E731
+                                   case_lists={False: [1]}, probes=3)
+        cache = PlanCache(max_entries=2)
+        cache.insert("a", curve())
+        cache.insert("b", curve())
+        assert cache.lookup("a") is not None        # refreshes a's recency
+        cache.insert("c", curve())                  # evicts b (LRU), not a
+        assert cache.evictions == 1
+        assert cache.lookup("b") is None            # evicted: miss
+        assert cache.lookup("a") is not None
+        assert cache.lookup("c") is not None
+        assert len(cache.curves) == 2
+        assert cache.stats()["evictions"] == 1
+        # b's probes were really measured: eviction must not make the
+        # cache look cheaper, and re-measuring b after the miss counts
+        # as a SECOND payment
+        assert cache.probes_spent == 9              # a + c + evicted b
+        cache.insert("b", curve())                  # re-measured, evicts a
+        assert cache.probes_spent == 12
+
+    def test_plancache_unbounded_by_default_never_evicts(self):
+        from repro.core import CurveModel
+        cache = PlanCache()
+        for i in range(256):
+            cache.insert(i, CurveModel(samples={False: [(1, 1.0)]},
+                                       case_lists={False: [1]}))
+        assert cache.evictions == 0
+        assert len(cache.curves) == 256
+
+    def test_bounded_plancache_still_reuses_across_mix(self, machine):
+        """Regression for the LRU bound: a bound comfortably above the
+        mix's working set must not cost ANY amortization — the bench mix
+        still reuses curves across tenants and beats isolated profiling."""
+        cache = PlanCache(max_entries=64)
+        pool = RuntimePool(machine=machine, plan_cache=cache,
+                           config=PoolConfig(max_active=3))
+        models = ["resnet50", "dcgan", "resnet50", "dcgan"]
+        for i, model in enumerate(models):
+            pool.submit(build_paper_graph(model), name=f"{model}-{i}")
+        res = pool.run()
+        serial = pool.run_serial()     # isolated per-job profiling
+        assert len(cache.curves) <= 64
+        assert cache.evictions == 0
+        assert res.cache_stats["hits"] > 0
+        assert res.cache_stats["probes_spent"] < serial.profiling_probes
+
 
 # ---------------------------------------------------------------------------
 # Serving-wave integration (analytic wave graph, no JAX execution needed)

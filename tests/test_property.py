@@ -208,14 +208,14 @@ def _blocker_graph():
     return b.build()
 
 
-def _preempting_pool(graphs, deadline_scale):
+def _preempting_pool(graphs, deadline_scale, topology=None):
     """A long-op blocker tenant plus random DAG tenants arriving staggered
     with deadlines tight enough (a fraction of each job's own critical
     path) that slack pressure — and usually preemption — occurs."""
     machine = SimMachine()
     pool = RuntimePool(machine=machine,
                        config=PoolConfig(
-                           max_active=4,
+                           max_active=4, topology=topology,
                            preemption=PreemptionPolicy(enabled=True)))
     jobs = [pool.submit(_blocker_graph(), name="blocker")]
     for i, g in enumerate(graphs, start=1):
@@ -304,6 +304,82 @@ def test_preemption_enabled_without_deadlines_matches_corun(graph):
                                preemption=PreemptionPolicy(enabled=True)))
     assert single.makespan == pooled.makespan
     assert not compare_timelines(timeline_rows(single), timeline_rows(pooled))
+
+
+# ---------------------------------------------------------------------------
+# topology-aware placement invariants (quadrant core booking)
+# ---------------------------------------------------------------------------
+
+@settings(**DAG_SETTINGS)
+@given(graphs=st.lists(op_graphs(), min_size=2, max_size=3),
+       scale=st.floats(0.1, 1.5))
+def test_quadrant_no_core_double_booked_across_preemption(graphs, scale):
+    """Under topology="quadrant" every non-hyper launch books concrete
+    core ids; at every instant — including preemption instants, where a
+    revoked partial run occupies [start, revoke) — no core hosts two
+    launches, and a launch books exactly its width in unique cores."""
+    machine, pool, jobs = _preempting_pool(graphs, scale,
+                                           topology="quadrant")
+    res = pool.run()
+    spans = [(r.start, r.finish, r) for recs in res.records.values()
+             for r in recs if not r.hyper]
+    spans += [(p.start, p.finish, p) for precs in res.preempted.values()
+              for p in precs if not p.hyper]
+    for _, _, r in spans:
+        assert len(r.cores) == r.threads
+        assert len(set(r.cores)) == len(r.cores)
+        assert all(0 <= c < machine.spec.cores for c in r.cores)
+    for t in sorted({t for s in spans for t in s[:2]}):
+        booked = [c for s0, s1, r in spans if s0 <= t < s1
+                  for c in r.cores]
+        assert len(booked) == len(set(booked))
+
+
+@settings(**DAG_SETTINGS)
+@given(graphs=st.lists(op_graphs(), min_size=2, max_size=3),
+       scale=st.floats(0.1, 1.5))
+def test_quadrant_launches_never_exceed_quadrant_capacity(graphs, scale):
+    """A launch's per-quadrant core bookings stay within each quadrant's
+    physical capacity (and hyper launches book no cores at all)."""
+    machine, pool, jobs = _preempting_pool(graphs, scale,
+                                           topology="quadrant")
+    res = pool.run()
+    spec = machine.spec
+    cap = {q: len(spec.quadrant_cores(q)) for q in range(spec.quadrants)}
+    recs = [r for rs in res.records.values() for r in rs]
+    recs += [p for ps in res.preempted.values() for p in ps]
+    for r in recs:
+        if r.hyper:
+            assert r.cores == ()
+            continue
+        per_q: dict[int, int] = {}
+        for c in r.cores:
+            q = spec.quadrant_of_core(c)
+            per_q[q] = per_q.get(q, 0) + 1
+        for q, n in per_q.items():
+            assert n <= cap[q]
+
+
+@settings(**DAG_SETTINGS)
+@given(graph=op_graphs())
+def test_flat_topology_pool_matches_corun_on_random_dags(graph):
+    """topology="flat" spelled out (not defaulted) keeps the differential
+    property: a 1-job flat pool is bit-identical to CorunScheduler — the
+    topology feature sits behind the same parity lock as Strategies 2-4."""
+    from repro.core import RuntimeConfig
+    single = corun_timeline(graph, SimMachine(seed=0))
+    pooled = pool_timeline(
+        graph, SimMachine(seed=0),
+        pool_config=PoolConfig(max_active=1, topology="flat"))
+    assert single.makespan == pooled.makespan
+    assert not compare_timelines(timeline_rows(single), timeline_rows(pooled))
+    quad_single = corun_timeline(graph, SimMachine(seed=0),
+                                 RuntimeConfig(topology="quadrant"))
+    quad_pooled = pool_timeline(graph, SimMachine(seed=0),
+                                RuntimeConfig(topology="quadrant"))
+    assert quad_single.makespan == quad_pooled.makespan
+    assert not compare_timelines(timeline_rows(quad_single),
+                                 timeline_rows(quad_pooled))
 
 
 @settings(**SETTINGS)

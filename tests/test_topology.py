@@ -1,0 +1,420 @@
+"""Topology-aware placement: spec topology, core placement policy,
+per-quadrant contention, relation-split interference, and the placement
+invariants (deterministic twins of the hypothesis properties in
+tests/test_property.py, runnable in hypothesis-less containers)."""
+
+import json
+import pathlib
+
+import pytest
+
+from repro.core import (ConcurrencyRuntime, GraphBuilder, PreemptionPolicy,
+                        RuntimeConfig, SimMachine, build_paper_graph)
+from repro.core.interference import InterferenceRecorder
+from repro.core.placement import (REL_ANY, REL_CROSS, REL_LOCAL,
+                                  free_cores_by_quadrant, place,
+                                  placement_relation, quadrants_of)
+from repro.hw.spec import KNL
+from repro.multitenant import (PoolConfig, RuntimePool, compare_timelines,
+                               corun_timeline, pool_timeline, timeline_rows)
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+
+
+@pytest.fixture(scope="module")
+def machine():
+    return SimMachine()
+
+
+# ---------------------------------------------------------------------------
+# KnlLikeSpec topology: tiles -> quadrants, shared-L2 pairs
+# ---------------------------------------------------------------------------
+
+class TestSpecTopology:
+    def test_quadrants_partition_all_cores_exactly_once(self):
+        seen = []
+        for q in range(KNL.quadrants):
+            seen.extend(KNL.quadrant_cores(q))
+        assert sorted(seen) == list(range(KNL.cores))
+        assert len(seen) == len(set(seen))
+
+    def test_asymmetric_tile_split(self):
+        # 34 tiles over 4 quadrants: 9/9/8/8 tiles = 18/18/16/16 cores
+        assert KNL.quadrant_tile_counts == (9, 9, 8, 8)
+        assert [len(KNL.quadrant_cores(q)) for q in range(4)] \
+            == [18, 18, 16, 16]
+
+    def test_quadrant_of_core_agrees_with_quadrant_cores(self):
+        for q in range(KNL.quadrants):
+            for c in KNL.quadrant_cores(q):
+                assert KNL.quadrant_of_core(c) == q
+        with pytest.raises(ValueError):
+            KNL.quadrant_of_core(KNL.cores)
+
+    def test_tile_pairs_share_quadrant(self):
+        """A shared-L2 tile never straddles a quadrant boundary."""
+        for t in range(KNL.tiles):
+            a, b = KNL.tile_cores(t)
+            assert b == a + 1
+            assert KNL.quadrant_of_core(a) == KNL.quadrant_of_core(b)
+
+    def test_quadrant_bandwidth_splits_mcdram(self):
+        assert KNL.quadrant_bandwidth * KNL.quadrants \
+            == pytest.approx(KNL.mcdram_bandwidth)
+
+
+# ---------------------------------------------------------------------------
+# placement policy: empty quadrant -> local packing -> bounded spill
+# ---------------------------------------------------------------------------
+
+class TestPlace:
+    def test_prefers_empty_quadrant_best_fit(self):
+        # q0 partly busy; q2/q3 empty with 16 cores each, q1 empty with 18:
+        # a 10-wide launch takes the SMALLEST adequate empty quadrant
+        busy = frozenset(KNL.quadrant_cores(0)[:4])
+        cores = place(KNL, 10, busy)
+        assert quadrants_of(KNL, cores) == {2}
+
+    def test_packs_quadrant_local_with_fewest_coresidents(self):
+        # all quadrants touched; q3 least busy -> 8-wide packs into q3
+        busy = set()
+        for q, n in ((0, 10), (1, 8), (2, 6), (3, 2)):
+            busy.update(KNL.quadrant_cores(q)[:n])
+        cores = place(KNL, 8, frozenset(busy))
+        assert quadrants_of(KNL, cores) == {3}
+
+    def test_bounded_spill_touches_fewest_quadrants(self):
+        # 10 free in each quadrant: a 20-wide launch spills over exactly 2
+        busy = set()
+        for q in range(4):
+            free = len(KNL.quadrant_cores(q)) - 10
+            busy.update(KNL.quadrant_cores(q)[:free])
+        cores = place(KNL, 20, frozenset(busy))
+        assert len(cores) == 20
+        assert len(quadrants_of(KNL, cores)) == 2
+
+    def test_prefer_hint_wins_ties(self):
+        assert quadrants_of(KNL, place(KNL, 8, frozenset(), prefer=3)) == {3}
+        # hint also steers the packing tier
+        busy = frozenset(c for q in range(4)
+                         for c in KNL.quadrant_cores(q)[:2])
+        assert quadrants_of(KNL, place(KNL, 8, busy, prefer=1)) == {1}
+
+    def test_avoid_constraints_respected_or_fail(self):
+        cores = place(KNL, 10, frozenset(), avoid=frozenset({0, 1}))
+        assert quadrants_of(KNL, cores) <= {2, 3}
+        # avoiding everything leaves no cores -> placement fails
+        assert place(KNL, 1, frozenset(),
+                     avoid=frozenset({0, 1, 2, 3})) is None
+        # too few cores outside the avoided quadrants -> fail, not spill
+        assert place(KNL, 40, frozenset(), avoid=frozenset({0, 1})) is None
+
+    def test_cache_sharing_takes_whole_tile_pairs(self):
+        # odd-numbered busy cores leave singleton tile-mates in q0; a
+        # sharing launch prefers the intact pairs of q1 via packing, but
+        # when forced into q0 it takes pairs first
+        busy = frozenset(c for c in KNL.quadrant_cores(0) if c % 2)
+        cores = place(KNL, 6, busy, cache_sharing=True,
+                      avoid=frozenset({1, 2, 3}))
+        assert cores is not None and len(cores) == 6
+        # only singletons remain in q0, so all six are tile-singles here;
+        # on an empty quadrant the same launch takes three full pairs
+        cores = place(KNL, 6, frozenset(), cache_sharing=True)
+        tiles = [c // 2 for c in cores]
+        assert len(set(tiles)) == 3          # 3 tiles x 2 cores
+
+    def test_deterministic(self):
+        busy = frozenset({0, 1, 20, 21, 40})
+        assert place(KNL, 12, busy) == place(KNL, 12, busy)
+
+    def test_free_cores_by_quadrant_accounts_busy(self):
+        busy = frozenset(KNL.quadrant_cores(1))
+        free = free_cores_by_quadrant(KNL, busy)
+        assert free[1] == []
+        assert len(free[0]) == 18 and len(free[2]) == 16
+
+
+# ---------------------------------------------------------------------------
+# per-quadrant contention in the cost oracle
+# ---------------------------------------------------------------------------
+
+class TestQuadrantBwShare:
+    def test_solo_launch_gets_full_bandwidth_like_flat(self, machine):
+        cores = KNL.quadrant_cores(0)[:16]
+        assert machine.quadrant_bw_share(cores, []) == 1.0
+
+    def test_disjoint_quadrants_beat_flat_corun_share(self, machine):
+        a = KNL.quadrant_cores(0)
+        b = KNL.quadrant_cores(1)
+        flat = machine.corun_bw_share(len(a), [len(b)])
+        quad = machine.quadrant_bw_share(a, [(len(b), b)])
+        assert quad > flat
+        assert quad == pytest.approx(
+            max(0.25, len(a) / (len(a) + len(b)))
+            * KNL.quadrant_local_boost)
+
+    def test_contested_quadrant_pays_cross_penalty(self, machine):
+        mine = KNL.quadrant_cores(0)[:8]
+        local = machine.quadrant_bw_share(
+            mine, [(8, KNL.quadrant_cores(1)[:8])])
+        shared = machine.quadrant_bw_share(
+            mine, [(8, KNL.quadrant_cores(0)[8:16])])
+        assert shared < local
+        base = max(0.25, 8 / 16)
+        assert shared == pytest.approx(base * KNL.cross_quadrant_penalty)
+
+    def test_partial_straddle_blends_per_core(self, machine):
+        # 18 cores home in q0 + 6 spilled into contested q1
+        mine = KNL.quadrant_cores(0) + KNL.quadrant_cores(1)[:6]
+        other = KNL.quadrant_cores(1)[6:14]
+        share = machine.quadrant_bw_share(mine, [(8, other)])
+        base = max(0.25, 24 / 32)
+        locality = (18 / 24) * KNL.quadrant_local_boost \
+            + (6 / 24) * KNL.cross_quadrant_penalty
+        assert share == pytest.approx(min(1.0, base * locality))
+
+    def test_unplaced_hyper_rider_contests_nothing(self, machine):
+        mine = KNL.quadrant_cores(0)[:8]
+        share = machine.quadrant_bw_share(mine, [(4, ())])
+        assert share == pytest.approx(
+            min(1.0, max(0.25, 8 / 12) * KNL.quadrant_local_boost))
+
+
+# ---------------------------------------------------------------------------
+# relation-split interference (the op-class-only blacklist bugfix)
+# ---------------------------------------------------------------------------
+
+class TestRelationSplitInterference:
+    def test_cross_observation_does_not_blacklist_local(self):
+        """The regression: one bad cross-quadrant observation used to
+        blacklist the pair EVERYWHERE; with the key split by placement
+        relation, the quadrant-local relation stays clean."""
+        rec = InterferenceRecorder()
+        rec.record("A", "B", 1.0, 10.0, relation=REL_CROSS)
+        assert rec.blacklisted("A", "B", REL_CROSS)
+        assert not rec.blacklisted("A", "B", REL_LOCAL)
+        assert not rec.blacklisted("A", "B", REL_ANY)
+        assert rec.blacklist() == frozenset({("A", "B", REL_CROSS)})
+
+    def test_flat_any_relation_unchanged(self):
+        rec = InterferenceRecorder()
+        rec.record("A", "B", 1.0, 10.0)            # default = "any"
+        assert rec.blacklisted("A", "B")
+        assert rec.blacklisted("B", "A")
+        assert not rec.blacklisted("A", "B", REL_LOCAL)
+
+    def test_placement_relation_classification(self):
+        a = KNL.quadrant_cores(0)[:4]
+        b = KNL.quadrant_cores(1)[:4]
+        c = KNL.quadrant_cores(0)[4:8]
+        assert placement_relation(KNL, a, b) == REL_LOCAL
+        assert placement_relation(KNL, a, c) == REL_CROSS
+        assert placement_relation(KNL, a, ()) == REL_CROSS   # hyper rider
+
+    def test_cross_blacklisted_pair_still_coruns_in_disjoint_quadrants(
+            self, machine):
+        """Quadrant mode re-admits a cross-blacklisted pair as long as
+        placement keeps their quadrants disjoint; a LOCAL blacklist (the
+        pair interferes even separated) forbids the co-run outright."""
+        def two_class_graph():
+            b = GraphBuilder("g")
+            for cls in ("ClassA", "ClassB"):
+                prev = None
+                for _ in range(2):
+                    prev = b.add(cls, (32, 16, 16, 64), flops=4e8,
+                                 bytes_moved=2e6,
+                                 deps=[prev] if prev is not None else [])
+            return b.build()
+
+        def run(relation):
+            rt = ConcurrencyRuntime(
+                machine=machine,
+                config=RuntimeConfig(topology="quadrant"))
+            graph = two_class_graph()
+            rt.profile(graph)
+            rt.recorder.record("ClassA", "ClassB", 1.0, 10.0,
+                               relation=relation)
+            res = rt.execute_step(graph)
+            a = [r for r in res.records if r.op.op_class == "ClassA"]
+            b = [r for r in res.records if r.op.op_class == "ClassB"]
+            overlap = [(x, y) for x in a for y in b
+                       if x.start < y.finish - 1e-15
+                       and y.start < x.finish - 1e-15]
+            return overlap
+
+        overlap = run(REL_CROSS)
+        assert overlap, "cross-only blacklist must not stop local co-runs"
+        for x, y in overlap:
+            assert not (quadrants_of(machine.spec, x.cores)
+                        & quadrants_of(machine.spec, y.cores)), \
+                "cross-blacklisted pair was placed into a shared quadrant"
+        assert not run(REL_LOCAL), \
+            "local-blacklisted pair co-launched (interferes even apart)"
+
+
+# ---------------------------------------------------------------------------
+# placement invariants — deterministic twins of the hypothesis properties
+# ---------------------------------------------------------------------------
+
+def _big_graph(n=3):
+    b = GraphBuilder("big")
+    prev = None
+    for _ in range(n):
+        prev = b.add("Huge", (512, 512, 64), flops=5e12, bytes_moved=1e9,
+                     working_set=1e9, deps=[prev] if prev is not None else [])
+    return b.build()
+
+
+def _urgent_chain(n=4):
+    b = GraphBuilder("urgent")
+    prev = None
+    for _ in range(n):
+        prev = b.add("WavePrefill", (32, 128, 64), flops=8e9,
+                     bytes_moved=2e7, working_set=2e7,
+                     parallel_fraction=0.97,
+                     deps=[prev] if prev is not None else [])
+    return b.build()
+
+
+def _assert_no_core_double_booked(machine, res):
+    """At every instant, each core hosts at most one non-hyper launch —
+    counting revoked partial runs over [start, revoke)."""
+    spans = [(r.start, r.finish, r.cores)
+             for recs in res.records.values() for r in recs if not r.hyper]
+    spans += [(p.start, p.finish, p.cores)
+              for precs in res.preempted.values() for p in precs
+              if not p.hyper]
+    for t in sorted({t for s in spans for t in s[:2]}):
+        live = [s for s in spans if s[0] <= t < s[1]]
+        booked: list[int] = []
+        for _, _, cores in live:
+            booked.extend(cores)
+        assert len(booked) == len(set(booked)), \
+            f"core double-booked at t={t}"
+
+
+def _assert_quadrant_capacity(machine, res):
+    """A launch's cores are unique, valid, match its width, and never
+    exceed any quadrant's capacity."""
+    spec = machine.spec
+    cap = {q: len(spec.quadrant_cores(q)) for q in range(spec.quadrants)}
+    all_recs = [r for recs in res.records.values() for r in recs]
+    all_recs += [p for precs in res.preempted.values() for p in precs]
+    for r in all_recs:
+        if r.hyper:
+            assert r.cores == ()
+            continue
+        assert len(r.cores) == r.threads
+        assert len(set(r.cores)) == len(r.cores)
+        per_q: dict[int, int] = {}
+        for c in r.cores:
+            assert 0 <= c < spec.cores
+            q = spec.quadrant_of_core(c)
+            per_q[q] = per_q.get(q, 0) + 1
+        for q, n in per_q.items():
+            assert n <= cap[q]
+
+
+class TestPlacementInvariants:
+    def _quadrant_mix(self, machine, *, preempt):
+        pool = RuntimePool(
+            machine=machine,
+            config=PoolConfig(
+                max_active=4, topology="quadrant",
+                preemption=(PreemptionPolicy(enabled=True)
+                            if preempt else None)))
+        pool.submit(_big_graph(), name="big")
+        pool.submit(build_paper_graph("dcgan"), name="dcgan")
+        pool.submit(_urgent_chain(), name="urgent", submit_time=0.05,
+                    deadline=0.15 if preempt else None)
+        return pool, pool.run()
+
+    def test_no_core_double_booked(self, machine):
+        _, res = self._quadrant_mix(machine, preempt=False)
+        _assert_no_core_double_booked(machine, res)
+        _assert_quadrant_capacity(machine, res)
+
+    def test_no_core_double_booked_across_preemption_revokes(self, machine):
+        _, res = self._quadrant_mix(machine, preempt=True)
+        assert res.n_preemptions >= 1, \
+            "scenario must actually exercise preemption"
+        _assert_no_core_double_booked(machine, res)
+        _assert_quadrant_capacity(machine, res)
+        # a revoked launch's cores are reusable immediately: the victim's
+        # relaunch and the preemptor never collide (covered above), and
+        # every op still completes exactly once
+        for job in res.jobs:
+            recs = res.records[job.jid]
+            assert len(recs) == job.graph.n_ops
+            assert len({r.op.uid for r in recs}) == job.graph.n_ops
+
+    def test_tenant_quadrant_affinity_recorded(self, machine):
+        pool, res = self._quadrant_mix(machine, preempt=False)
+        for job in res.jobs:
+            assert job.last_quadrant is not None
+            assert 0 <= job.last_quadrant < machine.spec.quadrants
+
+    def test_flat_pool_records_no_cores(self, machine):
+        pool = RuntimePool(machine=machine, config=PoolConfig(max_active=2))
+        pool.submit(build_paper_graph("dcgan"), name="a")
+        res = pool.run()
+        for recs in res.records.values():
+            for r in recs:
+                assert r.cores == ()
+
+
+# ---------------------------------------------------------------------------
+# flat topology = the pre-topology scheduler, bit for bit
+# ---------------------------------------------------------------------------
+
+class TestFlatParityLock:
+    @pytest.mark.parametrize("model", ["resnet50", "dcgan"])
+    def test_explicit_flat_pool_matches_committed_golden(self, model):
+        """topology="flat" (spelled out, not defaulted) reproduces the
+        PR-2/PR-3 golden timelines bitwise — the whole topology feature
+        sits behind the same parity lock as Strategies 2-4."""
+        golden = json.loads(
+            (GOLDEN_DIR / f"strategy_{model}.json").read_text())
+        res = pool_timeline(
+            build_paper_graph(model), SimMachine(seed=golden["seed"]),
+            pool_config=PoolConfig(max_active=1, topology="flat"))
+        assert res.makespan == golden["makespan"]
+        assert not compare_timelines(golden["records"], timeline_rows(res),
+                                     label_a="golden", label_b="flat-pool")
+
+    def test_flat_corun_scheduler_matches_explicit_flat_config(self):
+        graph = build_paper_graph("dcgan")
+        default = corun_timeline(graph, SimMachine(seed=0))
+        explicit = corun_timeline(graph, SimMachine(seed=0),
+                                  RuntimeConfig(topology="flat"))
+        assert default.makespan == explicit.makespan
+        assert not compare_timelines(timeline_rows(default),
+                                     timeline_rows(explicit))
+
+    def test_quadrant_single_job_pool_matches_quadrant_corun(self):
+        """The pool-vs-corun differential holds WITHIN quadrant topology
+        too: one core, two adapters, any topology."""
+        graph = build_paper_graph("dcgan")
+        cfg = RuntimeConfig(topology="quadrant")
+        single = corun_timeline(graph, SimMachine(seed=0), cfg)
+        pooled = pool_timeline(graph, SimMachine(seed=0), cfg)
+        assert single.makespan == pooled.makespan
+        assert not compare_timelines(timeline_rows(single),
+                                     timeline_rows(pooled))
+
+    def test_quadrant_changes_timings_not_correctness(self, machine):
+        pool = RuntimePool(machine=machine,
+                           config=PoolConfig(max_active=3,
+                                             topology="quadrant"))
+        for i, model in enumerate(["resnet50", "dcgan"]):
+            pool.submit(build_paper_graph(model), name=f"{model}-{i}")
+        res = pool.run()
+        for job in res.jobs:
+            assert job.done
+            recs = res.records[job.jid]
+            assert len(recs) == job.graph.n_ops
+            start = {r.op.uid: r.start for r in recs}
+            finish = {r.op.uid: r.finish for r in recs}
+            for op in job.graph.ops.values():
+                for d in op.deps:
+                    assert finish[d] <= start[op.uid] + 1e-12
