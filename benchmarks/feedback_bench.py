@@ -1,0 +1,144 @@
+"""Misprediction benchmark: closed-loop EWMA feedback vs frozen plans.
+
+Row convention matches benchmarks/run.py: ``name,us_per_call,derived``.
+
+Scenario: the 4-job bench mix, but PROFILING ran on a perturbed timing
+context — every op's measured time is off by a deterministic per-op
+factor in [0.5, 2.0] (log-uniform in the op's class+shape hash), the
+"stale curves / drifted machine" case.  A constant per-op factor leaves
+each curve's optimal width intact (the argmin is scale-invariant), so
+Strategy 1/2 widths stay right and what breaks is exactly what the
+closed loop re-estimates: cross-op predicted-time ORDER — Strategy 3's
+candidate ranking, admission horizon guard, and run-biggest fallback all
+compare predictions ACROSS ops, so per-op scale errors mis-schedule even
+with perfect widths.
+
+Claims measured:
+
+* ``feedback_off_mispredicted`` / ``feedback_ewma_mispredicted`` —
+  aggregate mix throughput under frozen vs adaptive plan stores, same
+  perturbed profiles, same execution machine.  Asserted:
+  ``feedback="ewma"`` >= ``feedback="off"`` (the closed loop must not
+  lose to the open loop it corrects).
+* ``feedback_prediction_error`` — mean |log(observed/predicted)| of the
+  first vs last quartile of completions under ``ewma``: the corrections
+  must actually converge toward observed service, not merely reshuffle.
+* ``feedback_exact_profiles`` — the control: with UNperturbed profiles
+  the adaptive store's throughput stays within 2% of frozen (feedback
+  may not tax the well-predicted case).
+"""
+
+from __future__ import annotations
+
+import math
+import zlib
+
+from repro.core import SimMachine, build_paper_graph
+from repro.core.simmachine import Placement
+from repro.multitenant import PoolConfig, RuntimePool
+
+MIX = [("resnet50", 1.0), ("dcgan", 1.0), ("resnet50", 2.0), ("dcgan", 1.0)]
+
+
+class MispredictedMachine(SimMachine):
+    """A profiling context whose measurements are off by a deterministic
+    per-op factor in [0.5, 2.0] — what a stale or drifted profile looks
+    like.  Used ONLY as ``RuntimePool(profile_machine=...)``; execution
+    still runs on the true machine."""
+
+    def __init__(self, *args, perturb_seed: int = 0, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.perturb_seed = perturb_seed
+
+    def _factor(self, op) -> float:
+        key = f"perturb:{self.perturb_seed}:{op.op_class}:{op.input_shape}"
+        h = zlib.crc32(key.encode()) / 0xFFFFFFFF
+        return 0.5 * (4.0 ** h)          # log-uniform in [0.5, 2.0]
+
+    def op_time(self, op, placement: Placement, *,
+                bw_share: float = 1.0) -> float:
+        return super().op_time(op, placement,
+                               bw_share=bw_share) * self._factor(op)
+
+    @property
+    def fingerprint(self):
+        # a perturbed context is NOT the true machine: tag the fingerprint
+        # so a PlanCache bound to one refuses curves from the other
+        return (*super().fingerprint, "perturbed", self.perturb_seed)
+
+
+def _run_mix(feedback: str, *, perturbed: bool):
+    machine = SimMachine()
+    pool = RuntimePool(
+        machine=machine,
+        profile_machine=(MispredictedMachine() if perturbed else None),
+        config=PoolConfig(max_active=3,
+                          feedback=(feedback if feedback != "off"
+                                    else None)))
+    for i, (model, prio) in enumerate(MIX):
+        pool.submit(build_paper_graph(model), priority=prio,
+                    name=f"{model}-{i}")
+    return pool, pool.run()
+
+
+def _log_error(res, records) -> float:
+    errs = [abs(math.log(r.duration / max(r.predicted, 1e-12)))
+            for r in records if not r.hyper]
+    return sum(errs) / max(len(errs), 1)
+
+
+def feedback_on_mispredicted_mix() -> list[str]:
+    _, off = _run_mix("off", perturbed=True)
+    pool, ew = _run_mix("ewma", perturbed=True)
+    rows = [
+        f"fb/feedback_off_mispredicted,{off.makespan*1e6:.1f},"
+        f"thpt={off.aggregate_throughput:.1f}ops/s",
+        f"fb/feedback_ewma_mispredicted,{ew.makespan*1e6:.1f},"
+        f"thpt={ew.aggregate_throughput:.1f}ops/s",
+        f"fb/feedback_speedup,{ew.makespan*1e6:.1f},"
+        f"speedup={off.makespan/ew.makespan:.3f}x",
+        f"fb/feedback_corrections,"
+        f"{ew.feedback_stats['observed']:.0f},"
+        f"points={ew.feedback_stats['points']:.0f}",
+    ]
+    assert ew.aggregate_throughput >= off.aggregate_throughput, (
+        "feedback='ewma' must not lose to frozen plans on the "
+        f"mispredicted mix (ewma {ew.aggregate_throughput:.2f} vs "
+        f"off {off.aggregate_throughput:.2f} ops/s)")
+    # convergence: launches late in the run are predicted better than the
+    # first launches (corrections absorb the per-op perturbation)
+    recs = sorted((r for rs in ew.records.values() for r in rs),
+                  key=lambda r: r.start)
+    q = max(len(recs) // 4, 1)
+    early, late = _log_error(ew, recs[:q]), _log_error(ew, recs[-q:])
+    rows.append(f"fb/feedback_prediction_error,0,"
+                f"early={early:.3f} late={late:.3f}")
+    assert late < early, (
+        f"EWMA corrections must converge: late-run prediction error "
+        f"{late:.3f} not below early-run {early:.3f}")
+    return rows
+
+
+def feedback_neutral_on_exact_profiles() -> list[str]:
+    """The control: with profiles measured on the TRUE machine, arming
+    feedback may not tax throughput (real observations still differ from
+    solo predictions by contention/jitter, so bitwise equality is not
+    expected — the zero-error parity suite pins that separately)."""
+    _, off = _run_mix("off", perturbed=False)
+    _, ew = _run_mix("ewma", perturbed=False)
+    ratio = ew.aggregate_throughput / off.aggregate_throughput
+    rows = [f"fb/feedback_exact_profiles,{ew.makespan*1e6:.1f},"
+            f"thpt_ratio={ratio:.3f}"]
+    assert ratio >= 0.98, (
+        f"feedback must be ~free when profiles are accurate "
+        f"(throughput ratio {ratio:.3f} < 0.98)")
+    return rows
+
+
+ALL = [feedback_on_mispredicted_mix, feedback_neutral_on_exact_profiles]
+
+
+if __name__ == "__main__":
+    for fn in ALL:
+        for row in fn():
+            print(row)

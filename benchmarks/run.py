@@ -28,11 +28,12 @@ def run_parity_check() -> None:
 
 
 def main() -> None:
-    from benchmarks import kernel_bench, multitenant_bench, numa_bench, \
-        paper_tables, preemption_bench, roofline
+    from benchmarks import feedback_bench, kernel_bench, multitenant_bench, \
+        numa_bench, paper_tables, preemption_bench, roofline
     fns = (list(paper_tables.ALL) + list(kernel_bench.ALL)
            + list(roofline.ALL) + list(multitenant_bench.ALL)
-           + list(preemption_bench.ALL) + list(numa_bench.ALL))
+           + list(preemption_bench.ALL) + list(numa_bench.ALL)
+           + list(feedback_bench.ALL))
     args = [a for a in sys.argv[1:] if a != "--check-parity"]
     parity = "--check-parity" in sys.argv[1:]
     only = args[0] if args else None

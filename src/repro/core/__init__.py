@@ -4,6 +4,10 @@ Faithful pieces (paper SIII):
   graph        -- dataflow op-graph IR the runtime schedules
   perfmodel    -- hill-climbing performance model + regression baseline
   concurrency  -- Strategies 1-2 (per-op parallelism, hysteresis)
+  planstore    -- closed-loop plan store: every prediction out
+                  (predict/candidates/demand/critical-path), every
+                  observation back in (launch/finish/revoke events;
+                  EWMA re-estimation under feedback="ewma")
   strategy     -- StrategyCore: the S2-clamp/S3-admission/S4-hyper rules,
                   shared by CorunScheduler and the multitenant pool
   scheduler    -- single-graph adapter over StrategyCore + baselines
@@ -21,6 +25,10 @@ from repro.core.perfmodel import (
     CurveCache, CurveModel, HillClimbProfiler, ProfileStore, RegressionSuite,
     paper_case_lists, power_of_two_cases, REGRESSORS)
 from repro.core.concurrency import ConcurrencyController, ConcurrencyPlan, OpPlan
+from repro.core.planstore import (
+    AdaptivePlanStore, CorrectionTable, FrozenPlanStore, OpObservation,
+    PlanStore, FEEDBACK_MODES, OBS_FINISH, OBS_LAUNCH, OBS_REVOKE,
+    critical_path_from, make_plan_store)
 from repro.core.strategy import (
     PreemptionPolicy, StrategyAdapter, StrategyConfig, StrategyCore,
     free_cores, pick_admissible, remaining_horizon)
@@ -42,6 +50,10 @@ __all__ = [
     "RegressionSuite",
     "paper_case_lists", "power_of_two_cases", "REGRESSORS",
     "ConcurrencyController", "ConcurrencyPlan", "OpPlan",
+    "AdaptivePlanStore", "CorrectionTable", "FrozenPlanStore",
+    "OpObservation", "PlanStore", "FEEDBACK_MODES",
+    "OBS_FINISH", "OBS_LAUNCH", "OBS_REVOKE",
+    "critical_path_from", "make_plan_store",
     "PreemptionPolicy", "StrategyAdapter", "StrategyConfig", "StrategyCore",
     "free_cores", "pick_admissible", "remaining_horizon",
     "CorunScheduler", "ScheduleResult", "ScheduledOp",

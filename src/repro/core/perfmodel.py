@@ -105,20 +105,26 @@ class CurveModel:
         assert out is not None
         return out
 
-    def candidates(self, k: int = 3) -> list[tuple[int, bool, float]]:
-        """Top-k most performant (threads, variant, time) — Strategy 3's
-        three candidates.  Candidates come from the MEASURED profiling
-        cases (the paper's runtime "tests a few cases ... and measures
-        their execution times"), so they are spaced by the probe interval
-        — that spacing is what lets a candidate drop low enough to fit
-        idle cores."""
-        all_cases = [(t, v, y)
-                     for v, pts in self.samples.items()
-                     for t, y in pts]
-        all_cases.sort(key=lambda c: c[2])
+    def measured_cases(self) -> list[tuple[int, bool, float]]:
+        """Every measured (threads, variant, time) probe point, in the
+        profiler's deterministic iteration order.  This is the candidate
+        SOURCE: both the frozen ranking below and the feedback store's
+        corrected re-ranking (``repro.core.planstore``) draw from exactly
+        this list, so the two rankings differ only by the correction
+        factors — never by which cases are eligible."""
+        return [(t, v, y)
+                for v, pts in self.samples.items()
+                for t, y in pts]
+
+    @staticmethod
+    def rank_cases(cases: list[tuple[int, bool, float]], k: int
+                   ) -> list[tuple[int, bool, float]]:
+        """Top-k of ``cases`` by time (stable sort), deduplicated by
+        thread count — Strategy 3's candidate rule, shared by the frozen
+        and corrected rankings."""
         picked: list[tuple[int, bool, float]] = []
         seen: set[int] = set()
-        for t, v, y in all_cases:
+        for t, v, y in sorted(cases, key=lambda c: c[2]):
             if t in seen:
                 continue
             picked.append((t, v, y))
@@ -126,6 +132,15 @@ class CurveModel:
             if len(picked) == k:
                 break
         return picked
+
+    def candidates(self, k: int = 3) -> list[tuple[int, bool, float]]:
+        """Top-k most performant (threads, variant, time) — Strategy 3's
+        three candidates.  Candidates come from the MEASURED profiling
+        cases (the paper's runtime "tests a few cases ... and measures
+        their execution times"), so they are spaced by the probe interval
+        — that spacing is what lets a candidate drop low enough to fit
+        idle cores."""
+        return self.rank_cases(self.measured_cases(), k)
 
     def measured_best(self) -> tuple[int, bool, float]:
         out: tuple[int, bool, float] | None = None

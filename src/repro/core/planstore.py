@@ -1,0 +1,317 @@
+"""Closed-loop plan store: predictions out, observations back in.
+
+The paper's runtime is a *closed loop*: the performance model predicts op
+execution time per concurrency width, the scheduler acts on the
+prediction, and observed behavior feeds back (§III-D records co-run
+slowdowns into the interference blacklist).  Until this module the
+blacklist was the ONLY feedback path we reproduced — every other
+prediction (``Plan`` curves, ``Job.demand``, deadline critical paths)
+was frozen at profiling/admission time and consumed through ad-hoc
+``controller.store.curve(op).predict(...)`` reads scattered across the
+schedulers.
+
+``PlanStore`` closes the loop as ONE interface:
+
+* **predict side** — everything a scheduler consumes: per-width op time
+  (``predict``), Strategy-3 candidate configurations (``candidates``),
+  the frozen-plan width re-priced (``replan``), and the aggregate
+  predictions built on top of them — a job's outstanding demand in
+  core-seconds (``remaining_demand``) and per-node downstream critical
+  paths that turn deadlines into slack (``remaining_critical_path``);
+* **observe side** — everything a scheduler produces: launch, finish,
+  and preemption-revoke events arrive as ``OpObservation`` records via
+  ``observe`` (the ``StrategyAdapter.observe`` seam reports them for
+  both the single-graph scheduler and the multi-tenant pool, and
+  ``RealGraphExecutor`` reports real JAX payload wall times through the
+  same call).
+
+Two implementations:
+
+* ``FrozenPlanStore`` — ``feedback="off"`` (the default): predictions
+  come from the profiling-time curves verbatim and observations are
+  discarded, reproducing the pre-feedback schedulers bit for bit
+  (locked by the golden/differential suites);
+* ``AdaptivePlanStore`` — ``feedback="ewma"``: observed service is
+  EWMA-blended into per-(op-key, width) correction factors over the
+  frozen curves, so when profiles mispredict (stale measurements, a
+  perturbed machine) every downstream prediction — candidate ranking,
+  admission horizons, ``Job.demand``, deadline slack — converges toward
+  observed reality while the profiling structure (probe grid, S1/S2
+  widths) stays intact.
+
+The blend is the *incremental* EWMA form ``c += alpha * (ratio - c)``,
+which is exactly stable at the fixed point: a stream of observations
+matching predictions (ratio 1.0) leaves every correction at 1.0 and —
+because a 1.0 factor short-circuits to the raw curve value — every
+prediction bit-identical to ``feedback="off"``.  The parity suite runs a
+zero-error trace through the adaptive store to pin that property.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Hashable
+
+from repro.core.concurrency import (ConcurrencyController, ConcurrencyPlan,
+                                    OpPlan)
+from repro.core.graph import Op, OpGraph
+from repro.core.perfmodel import CurveModel, cross_graph_key
+
+# observation kinds, as reported through StrategyAdapter.observe
+OBS_LAUNCH = "launch"      # op committed to cores (no duration yet)
+OBS_FINISH = "finish"      # op completed; observed = full service time
+OBS_REVOKE = "revoke"      # op preempted; observed = discarded partial run
+
+FEEDBACK_MODES = ("off", "ewma")
+
+
+@dataclasses.dataclass(frozen=True)
+class OpObservation:
+    """One scheduler-reported execution event for one op launch."""
+
+    op: Op
+    threads: int
+    variant: bool            # affinity flavor of the launch
+    hyper: bool              # hyper-thread-lane launch (S4)
+    predicted: float         # what the plan said this launch would take
+    observed: float          # elapsed seconds (partial for OBS_REVOKE)
+    kind: str = OBS_FINISH
+
+
+def critical_path_from(graph: OpGraph,
+                       pred: dict[int, float]) -> dict[int, float]:
+    """uid -> ``pred[uid]`` plus the longest consumer chain (reverse
+    topological order via Kahn on consumer counts — graph uids are
+    usually topo-ordered already, but don't rely on it)."""
+    out_deg = {uid: len(graph.consumers(uid)) for uid in graph.ops}
+    stack = [uid for uid, n in out_deg.items() if n == 0]
+    cp: dict[int, float] = {}
+    while stack:
+        uid = stack.pop()
+        cp[uid] = pred[uid] + max(
+            (cp[c] for c in graph.consumers(uid)), default=0.0)
+        for d in graph.ops[uid].deps:
+            out_deg[d] -= 1
+            if out_deg[d] == 0:
+                stack.append(d)
+    return cp
+
+
+class PlanStore(abc.ABC):
+    """Every prediction a scheduler consumes and every completion it
+    produces, through one interface (see module docstring)."""
+
+    # ---- predict side --------------------------------------------------
+    @abc.abstractmethod
+    def predict(self, op: Op, threads: int, variant: bool) -> float:
+        """Predicted solo execution time of ``op`` at a width/affinity."""
+
+    @abc.abstractmethod
+    def candidates(self, op: Op, k: int = 3) -> list[OpPlan]:
+        """Strategy 3's top-k candidate configurations for ``op``."""
+
+    def replan(self, op: Op, base: OpPlan) -> OpPlan:
+        """The frozen plan's width, re-priced by the store — the
+        instance-plan lookup both scheduler adapters use."""
+        return OpPlan(base.threads, base.variant,
+                      self.predict(op, base.threads, base.variant))
+
+    # ---- observe side --------------------------------------------------
+    def observe(self, obs: OpObservation) -> None:
+        """Report an execution event.  The frozen store discards it."""
+
+    @property
+    def adaptive(self) -> bool:
+        """True when observations can change future predictions (callers
+        that re-derive cached aggregates key off this)."""
+        return False
+
+    # ---- aggregate predictions ----------------------------------------
+    def remaining_demand(self, graph: OpGraph, plan: ConcurrencyPlan,
+                         done: frozenset[int] | set[int] = frozenset()
+                         ) -> float:
+        """Outstanding predicted core-seconds of ``graph`` under the
+        frozen plan widths, excluding completed uids — the admission and
+        fair-share currency (``Job.demand``)."""
+        total = 0.0
+        for uid, op in graph.ops.items():
+            if uid in done:
+                continue
+            p = plan.per_instance[op.size_key]
+            total += self.predict(op, p.threads, p.variant) * p.threads
+        return total
+
+    def remaining_critical_path(self, graph: OpGraph, plan: ConcurrencyPlan,
+                                done: frozenset[int] | set[int] = frozenset()
+                                ) -> dict[int, float]:
+        """uid -> predicted time from starting that node to finishing the
+        graph (the node's own re-priced plan prediction plus the longest
+        consumer chain; completed nodes contribute zero).  This is what
+        turns a job deadline into per-node slack (``Job.cp``)."""
+        pred = {}
+        for uid, op in graph.ops.items():
+            if uid in done:
+                pred[uid] = 0.0
+            else:
+                p = plan.per_instance[op.size_key]
+                pred[uid] = self.predict(op, p.threads, p.variant)
+        return critical_path_from(graph, pred)
+
+
+class FrozenPlanStore(PlanStore):
+    """``feedback="off"``: the profiling-time curves, verbatim.
+
+    Predictions resolve against the controller's frozen ``ProfileStore``
+    exactly as the pre-feedback schedulers did (same floats, same
+    candidate order), and ``observe`` is a no-op — so every scheduler
+    built on this store is bit-for-bit the PR-4 scheduler."""
+
+    def __init__(self, controller: ConcurrencyController):
+        self.controller = controller
+
+    def predict(self, op: Op, threads: int, variant: bool) -> float:
+        return self.controller.store.curve(op).predict(threads, variant)
+
+    def candidates(self, op: Op, k: int = 3) -> list[OpPlan]:
+        return self.controller.candidates_for(op, k)
+
+
+@dataclasses.dataclass
+class CorrectionTable:
+    """Shared EWMA state: observed/predicted service ratios per curve
+    point, blended incrementally (``c += alpha * (ratio - c)``).
+
+    One table can back many ``AdaptivePlanStore`` views (the pool shares
+    one across all tenants, keyed by ``cross_graph_key`` — the same key
+    the PlanCache shares curves under, so an op two tenants both run
+    teaches both).  ``point`` entries correct the exact (key, width,
+    variant) observed; ``overall`` keeps a per-key ratio used as the
+    fallback for widths never observed, so a correction learned at the
+    plan width still informs a squeezed fallback launch.
+
+    ``zero_error`` is the parity-suite hook: every observation is
+    treated as exactly matching its prediction (ratio 1.0), which must
+    leave the adaptive store bit-identical to the frozen one — any drift
+    is a bug in the blend math."""
+
+    alpha: float = 0.25
+    # observed/predicted ratios outside this band are clamped before
+    # blending: a single pathological co-run (or a division by a tiny
+    # prediction) must not catapult the correction
+    ratio_bounds: tuple[float, float] = (0.125, 8.0)
+    zero_error: bool = False
+    point: dict[tuple[Hashable, int, bool], float] = dataclasses.field(
+        default_factory=dict)
+    overall: dict[Hashable, float] = dataclasses.field(default_factory=dict)
+    observed: int = 0        # finish observations blended
+    revoked: int = 0         # preemption revokes reported (not blended)
+
+    def update(self, key: Hashable, threads: int, variant: bool,
+               ratio: float) -> None:
+        lo, hi = self.ratio_bounds
+        ratio = min(max(ratio, lo), hi)
+        for table, k in ((self.point, (key, threads, variant)),
+                         (self.overall, key)):
+            old = table.get(k, 1.0)
+            table[k] = old + self.alpha * (ratio - old)
+        self.observed += 1
+
+    def factor(self, key: Hashable, threads: int, variant: bool) -> float:
+        c = self.point.get((key, threads, variant))
+        if c is None:
+            c = self.overall.get(key, 1.0)
+        return c
+
+    def stats(self) -> dict[str, float]:
+        return {
+            "observed": self.observed,
+            "revoked": self.revoked,
+            "points": len(self.point),
+            "keys": len(self.overall),
+        }
+
+
+class AdaptivePlanStore(PlanStore):
+    """``feedback="ewma"``: frozen curves, online corrections.
+
+    Predictions are the frozen curve value times the EWMA correction for
+    that (op key, width, variant); Strategy-3 candidates are re-ranked
+    by their CORRECTED times, so a width the profile under-predicted
+    loses its top-k seat once observations expose it.  Only finish
+    events blend (a launch carries no duration yet; a revoked partial
+    run is not a service time; a hyper-lane duration measures the
+    0.55-efficiency spare-thread lane, not the curve's placement) — but
+    all events flow through ``observe`` so accounting hooks and future
+    stores see the full stream.
+
+    A correction factor of exactly 1.0 short-circuits to the raw curve
+    value, so an all-zero-error observation stream keeps this store
+    bit-identical to ``FrozenPlanStore`` (the parity lock)."""
+
+    def __init__(self, controller: ConcurrencyController,
+                 corrections: CorrectionTable | None = None):
+        self.controller = controller
+        self.corrections = (corrections if corrections is not None
+                            else CorrectionTable())
+
+    @property
+    def adaptive(self) -> bool:
+        return True
+
+    def predict(self, op: Op, threads: int, variant: bool) -> float:
+        base = self.controller.store.curve(op).predict(threads, variant)
+        c = self.corrections.factor(cross_graph_key(op), threads, variant)
+        return base if c == 1.0 else base * c
+
+    def candidates(self, op: Op, k: int = 3) -> list[OpPlan]:
+        if not op.tunable:
+            # non-tunable ops keep the controller's pinned plan (the
+            # runtime never re-tunes them); only the time is re-priced
+            base = self.controller.candidates_for(op, 1)[0]
+            return [self.replan(op, base)]
+        curve = self.controller.store.curve(op)
+        # CurveModel.candidates over the same measured-case source and
+        # ranking rule, but with CORRECTED times (identical output when
+        # every correction is 1.0 — predict() at a probed point returns
+        # the sample value exactly, see the zero-error parity suite)
+        scored = [(t, v, self.predict(op, t, v))
+                  for t, v, _ in curve.measured_cases()]
+        return [OpPlan(t, v, y)
+                for t, v, y in CurveModel.rank_cases(scored, k)]
+
+    def observe(self, obs: OpObservation) -> None:
+        if obs.kind == OBS_REVOKE:
+            self.corrections.revoked += 1
+            return
+        if obs.kind != OBS_FINISH or obs.hyper:
+            return
+        if self.corrections.zero_error:
+            ratio = 1.0
+        else:
+            # the ratio is observed over the BASE curve prediction, not
+            # over obs.predicted (the launch-time prediction, which
+            # already carries the current correction — dividing by it
+            # would chase the fixed point c^2 = observed/base instead of
+            # c = observed/base, stalling convergence at the square root)
+            try:
+                base = self.controller.store.curve(obs.op).predict(
+                    obs.threads, obs.variant)
+            except KeyError:
+                return              # no curve to correct (unprofiled op)
+            ratio = obs.observed / max(base, 1e-12)
+        self.corrections.update(cross_graph_key(obs.op), obs.threads,
+                                obs.variant, ratio)
+
+
+def make_plan_store(feedback: str, controller: ConcurrencyController, *,
+                    corrections: CorrectionTable | None = None) -> PlanStore:
+    """The one constructor every runtime/pool uses, so the gating knob
+    (``StrategyConfig.feedback``) has a single interpretation."""
+    if feedback == "off":
+        return FrozenPlanStore(controller)
+    if feedback == "ewma":
+        return AdaptivePlanStore(controller, corrections)
+    raise ValueError(
+        f"unknown feedback mode {feedback!r}; expected one of "
+        f"{FEEDBACK_MODES}")

@@ -28,6 +28,8 @@ from repro.core.graph import Op, OpGraph
 from repro.core.interference import InterferenceRecorder
 from repro.core.perfmodel import (CurveCache, HillClimbProfiler, ProfileStore,
                                   paper_case_lists)
+from repro.core.planstore import (OBS_FINISH, OpObservation, PlanStore,
+                                  make_plan_store)
 from repro.core.scheduler import CorunScheduler, ScheduleResult, uniform_schedule
 from repro.core.simmachine import Placement, SimMachine
 from repro.core.strategy import StrategyConfig
@@ -46,6 +48,7 @@ class RuntimeConfig:
     min_fallback_cores: int = 4     # run-biggest fallback floor
     fallback_slack: float = 1.25    # fallback horizon slack
     topology: str = "flat"          # "flat" | "quadrant" placement
+    feedback: str = "off"           # closed-loop plan store ("off" | "ewma")
 
     def strategy_config(self) -> StrategyConfig:
         """The shared-core view of these knobs (see repro.core.strategy).
@@ -57,7 +60,7 @@ class RuntimeConfig:
             max_ht_corunners=self.max_ht_corunners,
             min_fallback_cores=self.min_fallback_cores,
             fallback_slack=self.fallback_slack,
-            topology=self.topology)
+            topology=self.topology, feedback=self.feedback)
 
 
 @dataclasses.dataclass
@@ -94,6 +97,11 @@ class ConcurrencyRuntime:
         self.store: ProfileStore | None = None
         self.plan: ConcurrencyPlan | None = None
         self.controller: ConcurrencyController | None = None
+        # the closed-loop plan store (built at profile time): every
+        # prediction the scheduler consumes and every completion it
+        # reports flows through it; persists across execute_step calls so
+        # feedback="ewma" corrections carry from one step to the next
+        self.planstore: PlanStore | None = None
         self.recorder = InterferenceRecorder(
             threshold=self.config.interference_threshold)
 
@@ -122,6 +130,8 @@ class ConcurrencyRuntime:
             default_threads=self.machine.spec.cores,
             interval=self.config.interval)
         self.plan = self.controller.build_plan(graph)
+        self.planstore = make_plan_store(self.config.feedback,
+                                         self.controller)
         return self.store
 
     def profiling_cost(self) -> tuple[int, float]:
@@ -152,7 +162,9 @@ class ConcurrencyRuntime:
             candidates=cfg.candidates,
             min_fallback_cores=cfg.min_fallback_cores,
             fallback_slack=cfg.fallback_slack,
-            topology=cfg.topology)
+            topology=cfg.topology,
+            feedback=cfg.feedback,
+            planstore=self.planstore)
 
     def execute_step(self, graph: OpGraph) -> ScheduleResult:
         if self.plan is None:
@@ -186,17 +198,48 @@ class RealGraphExecutor:
     ``op.payload`` is ``fn(dep_results: dict[uid, value]) -> value``.  The
     worker count plays the role of inter-op parallelism; per-op results are
     returned with wall-clock timings so the runtime's decisions can be
-    validated against real JAX computations."""
+    validated against real JAX computations.
+
+    Real timings can feed the same closed loop as the simulated
+    schedulers: pass ``store``/``plan`` to ``run`` and every payload
+    completion is reported through ``PlanStore.observe`` as an
+    ``OBS_FINISH`` event at the op's frozen-plan width — the first step
+    toward a pool-backed real executor whose observed wall times drive
+    online re-estimation."""
 
     def __init__(self, max_workers: int = 2):
         self.max_workers = max_workers
 
-    def run(self, graph: OpGraph) -> tuple[dict[int, object], dict[int, float], float]:
+    def run(self, graph: OpGraph, *, store: PlanStore | None = None,
+            plan: ConcurrencyPlan | None = None
+            ) -> tuple[dict[int, object], dict[int, float], float]:
         results: dict[int, object] = {}
         timings: dict[int, float] = {}
         pending = {u: len(op.deps) for u, op in graph.ops.items()}
         ready = [u for u, n in pending.items() if n == 0]
         t0 = time.perf_counter()
+
+        def observe(uid: int, dt: float) -> None:
+            if store is None:
+                return
+            op = graph.ops[uid]
+            if plan is not None and op.size_key in plan.per_instance:
+                p = plan.per_instance[op.size_key]
+                threads, variant = p.threads, p.variant
+            else:
+                threads, variant = 1, True
+            try:
+                predicted = store.predict(op, threads, variant)
+            except KeyError:
+                # op never profiled under this store — the observation
+                # record still needs a predicted value (it is informative
+                # only: AdaptivePlanStore re-derives the base prediction
+                # itself and skips ops without a curve)
+                predicted = dt
+            store.observe(OpObservation(
+                op=op, threads=threads, variant=variant, hyper=False,
+                predicted=predicted, observed=dt, kind=OBS_FINISH))
+
         with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
             futures: dict[Future, int] = {}
 
@@ -220,6 +263,7 @@ class RealGraphExecutor:
                     out, dt = fut.result()
                     results[uid] = out
                     timings[uid] = dt
+                    observe(uid, dt)
                     for c in graph.consumers(uid):
                         pending[c] -= 1
                         if pending[c] == 0:

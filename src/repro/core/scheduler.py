@@ -41,6 +41,8 @@ from typing import Mapping, Sequence
 from repro.core.concurrency import ConcurrencyPlan, ConcurrencyController, OpPlan
 from repro.core.graph import Op, OpGraph
 from repro.core.interference import InterferenceRecorder
+from repro.core.planstore import (OBS_FINISH, FrozenPlanStore, OpObservation,
+                                  PlanStore, make_plan_store)
 from repro.core.simmachine import Placement, SimMachine
 from repro.core.strategy import (ScheduledOp, ScheduleResult, StrategyAdapter,
                                  StrategyConfig, StrategyCore, free_cores,
@@ -97,16 +99,20 @@ class _EventSim:
 
 class _GraphAdapter(StrategyAdapter):
     """Single-graph view for ``StrategyCore``: node keys are op uids, the
-    candidate source is ONE global ready group, and plan lookups resolve
-    against the graph's own frozen plan/controller."""
+    candidate source is ONE global ready group, and every plan lookup
+    resolves through the graph's ``PlanStore`` (frozen profiling curves
+    under ``feedback="off"``, observation-corrected ones under
+    ``feedback="ewma"`` — see ``repro.core.planstore``)."""
 
     def __init__(self, sim: _EventSim, controller: ConcurrencyController,
                  plan: ConcurrencyPlan, *, strategy2: bool,
-                 spec=None):
+                 spec=None, store: PlanStore | None = None):
         self.sim = sim
         self.controller = controller
         self.plan = plan
         self.strategy2 = strategy2
+        self.store = store if store is not None \
+            else FrozenPlanStore(controller)
         self._spec = spec
         self._last_quadrant: int | None = None
 
@@ -126,21 +132,26 @@ class _GraphAdapter(StrategyAdapter):
 
     def instance_plan(self, key: int) -> OpPlan:
         op = self.op(key)
-        base = self.plan.plan_for(op, strategy2=self.strategy2)
-        # predicted time must be instance-specific: re-predict from curve
-        curve = self.controller.store.curve(op)
-        return OpPlan(base.threads, base.variant,
-                      curve.predict(base.threads, base.variant))
+        # predicted time must be instance-specific: the store re-prices
+        # the frozen plan's width (corrected under feedback="ewma")
+        return self.store.replan(op, self.plan.plan_for(
+            op, strategy2=self.strategy2))
 
     def candidates_for(self, key: int, k: int) -> list[OpPlan]:
-        return self.controller.candidates_for(self.op(key), k)
+        return self.store.candidates(self.op(key), k)
 
     def clamp(self, key: int, proposal: OpPlan) -> OpPlan:
         return self.plan.clamp(self.op(key), proposal)
 
     def predict(self, key: int, threads: int, variant: bool) -> float:
-        return self.controller.store.curve(self.op(key)).predict(
-            threads, variant)
+        return self.store.predict(self.op(key), threads, variant)
+
+    def observe(self, key: int, sched: ScheduledOp, kind: str,
+                elapsed: float) -> None:
+        self.store.observe(OpObservation(
+            op=sched.op, threads=sched.threads, variant=sched.variant,
+            hyper=sched.hyper, predicted=sched.predicted,
+            observed=elapsed, kind=kind))
 
     def commit(self, key: int, sched: ScheduledOp) -> None:
         self.sim.ready.remove(key)
@@ -170,11 +181,19 @@ class CorunScheduler:
                  enable_s3: bool = True, enable_s4: bool = True,
                  strategy2: bool = True, max_ht_corunners: int = 2,
                  candidates: int = 3, min_fallback_cores: int = 4,
-                 fallback_slack: float = 1.25, topology: str = "flat"):
+                 fallback_slack: float = 1.25, topology: str = "flat",
+                 feedback: str = "off",
+                 planstore: PlanStore | None = None):
         self.machine = machine
         self.controller = controller
         self.plan = plan
         self.strategy2 = strategy2
+        # the closed-loop plan store every prediction/observation flows
+        # through; callers (ConcurrencyRuntime) usually inject one so the
+        # store outlives a single scheduler, but a direct construction
+        # gets its own from the feedback knob
+        self.planstore = planstore if planstore is not None \
+            else make_plan_store(feedback, controller)
         self.core = StrategyCore(
             machine,
             StrategyConfig(enable_s3=enable_s3, enable_s4=enable_s4,
@@ -182,7 +201,7 @@ class CorunScheduler:
                            max_ht_corunners=max_ht_corunners,
                            min_fallback_cores=min_fallback_cores,
                            fallback_slack=fallback_slack,
-                           topology=topology),
+                           topology=topology, feedback=feedback),
             recorder=recorder, total_cores=total_cores)
 
     @property
@@ -196,7 +215,8 @@ class CorunScheduler:
     def adapter(self, sim: _EventSim) -> _GraphAdapter:
         return _GraphAdapter(sim, self.controller, self.plan,
                              strategy2=self.strategy2,
-                             spec=self.machine.spec)
+                             spec=self.machine.spec,
+                             store=self.planstore)
 
     # ------------------------------------------------------------------
     def run(self, graph: OpGraph) -> ScheduleResult:
@@ -209,7 +229,11 @@ class CorunScheduler:
         while not sim.done:
             self.core.drain(adapter)
             if sim.running:
-                sim.complete_next()
+                sched = sim.complete_next()
+                # close the loop: the completion's service time flows
+                # back into the plan store (no-op under feedback="off")
+                adapter.observe(sched.op.uid, sched, OBS_FINISH,
+                                sched.duration)
         return ScheduleResult(makespan=sim.clock, records=sim.records,
                               events=sim.events)
 

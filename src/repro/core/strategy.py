@@ -56,6 +56,7 @@ from repro.core.graph import Op
 from repro.core.interference import InterferenceRecorder, _pair_key
 from repro.core.placement import (REL_ANY, REL_CROSS, REL_LOCAL,
                                   place, placement_relation, quadrants_of)
+from repro.core.planstore import OBS_LAUNCH, OBS_REVOKE
 from repro.core.simmachine import Placement, SimMachine
 
 NodeKey = Hashable            # int (uid) or (jid, uid) — opaque to the core
@@ -166,6 +167,13 @@ class StrategyConfig:
     # are computed from actual quadrant co-residents, and interference is
     # recorded per placement relation (local vs cross-quadrant).
     topology: str = "flat"
+    # closed-loop plan feedback ("off" | "ewma", see repro.core.planstore).
+    # "off" keeps every prediction frozen at profiling time — bit-for-bit
+    # the pre-feedback schedulers (the golden/differential lock).  "ewma"
+    # blends observed service back into the plan store: candidate ranking,
+    # admission horizons, Job.demand, and deadline slack all track
+    # observed reality when profiles mispredict.
+    feedback: str = "off"
 
 
 class StrategyAdapter(abc.ABC):
@@ -228,6 +236,17 @@ class StrategyAdapter(abc.ABC):
 
     def charge(self, key: NodeKey, sched: ScheduledOp) -> None:
         """Post-launch accounting hook (pool: weighted fair share)."""
+
+    def observe(self, key: NodeKey, sched: ScheduledOp, kind: str,
+                elapsed: float) -> None:
+        """Report an execution event to the scheduler's plan store — the
+        closed-loop seam (see ``repro.core.planstore``).  The core calls
+        it on every launch (``OBS_LAUNCH``, elapsed 0) and preemption
+        revoke (``OBS_REVOKE``, elapsed = discarded partial run); the
+        schedulers' event loops call it on every completion
+        (``OBS_FINISH``, elapsed = service time).  The default is a
+        no-op, so adapters without a store — and every
+        ``feedback="off"`` scheduler — behave exactly as before."""
 
     def placement_hint(self, key: NodeKey) -> int | None:
         """Preferred quadrant for the node's launch under
@@ -392,6 +411,7 @@ class StrategyCore:
                                  plan.predicted_time, dur, relation=rel)
         adapter.commit(key, sched)
         adapter.charge(key, sched)
+        adapter.observe(key, sched, OBS_LAUNCH, 0.0)
         return sched
 
     # ---- Strategy 3 ----------------------------------------------------
@@ -605,8 +625,9 @@ class StrategyCore:
             return False
         if victim_key is not None:
             revoked = adapter.revoke(victim_key)
-            adapter.refund(victim_key, revoked,
-                           adapter.clock - revoked.start)
+            elapsed = adapter.clock - revoked.start
+            adapter.refund(victim_key, revoked, elapsed)
+            adapter.observe(victim_key, revoked, OBS_REVOKE, elapsed)
             free = self.free(adapter)
         # fewest-thread admissible candidate, horizon deliberately waived;
         # clamp to the claimed cores when the preferred width is unreachable

@@ -9,15 +9,24 @@ Deadline/SLO knobs: ``--deadlines`` gives each job an absolute deadline
 (submit time + per-job budget) and ``--preempt`` arms checkpoint-free
 op preemption, so a tenant that runs out of slack can revoke the
 longest-remaining running op (see ``repro.core.strategy.PreemptionPolicy``).
+
+Closed-loop knobs: ``--feedback ewma`` arms the adaptive plan store
+(observed service EWMA-corrects every prediction — candidate ranking,
+admission demand, deadline slack; see ``repro.core.planstore``), and
+``--plan-cache-path`` persists the cross-job curve cache across launcher
+invocations (loaded before the run if the file exists, dumped after), so
+profiling probes paid today are still amortized tomorrow.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 
 from repro.core import SimMachine, build_paper_graph
-from repro.multitenant import PoolConfig, PreemptionPolicy, RuntimePool
+from repro.multitenant import (PlanCache, PoolConfig, PreemptionPolicy,
+                               RuntimePool)
 
 
 def main() -> None:
@@ -49,6 +58,18 @@ def main() -> None:
                          "(empty quadrant first, quadrant-local packing, "
                          "bounded spill) with per-quadrant bandwidth "
                          "contention and tenant-to-quadrant affinity")
+    ap.add_argument("--feedback", choices=("off", "ewma"), default="off",
+                    help="closed-loop plan store: 'off' freezes every "
+                         "prediction at profiling time (bit-for-bit the "
+                         "pre-feedback pool); 'ewma' blends observed "
+                         "service back into predictions, re-estimating "
+                         "demand and deadline slack online")
+    ap.add_argument("--plan-cache-path", default=None,
+                    help="JSON file to persist the cross-job plan cache "
+                         "across invocations: loaded before the run when "
+                         "it exists (corrupted/mismatched files degrade "
+                         "to an empty cache with a warning), dumped "
+                         "after the run")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scale", type=int, default=1,
                     help="layer-count multiplier for every job graph")
@@ -83,12 +104,19 @@ def main() -> None:
             raise SystemExit("pool-vs-corun parity check FAILED")
         parity = {m: rec["ok"] for m, rec in report["models"].items()}
 
+    cache_path = (pathlib.Path(args.plan_cache_path)
+                  if args.plan_cache_path else None)
+    plan_cache = (PlanCache.load(cache_path)
+                  if cache_path is not None and cache_path.exists()
+                  else PlanCache())
     pool = RuntimePool(
         machine=SimMachine(seed=args.seed),
+        plan_cache=plan_cache,
         config=PoolConfig(
             max_active=args.max_active,
             reservation_window=args.reservation_window,
             topology=(args.topology if args.topology != "flat" else None),
+            feedback=(args.feedback if args.feedback != "off" else None),
             preemption=(PreemptionPolicy(enabled=True)
                         if args.preempt else None)))
     for i, (model, prio, budget) in enumerate(zip(models, prios, budgets)):
@@ -100,6 +128,8 @@ def main() -> None:
                               if budget is not None else None))
     res = pool.run()
     serial = pool.run_serial()
+    if cache_path is not None:
+        plan_cache.dump(cache_path)
 
     print(json.dumps({
         "jobs": [{
@@ -110,7 +140,12 @@ def main() -> None:
             "run_latency_s": j.run_latency,
             "serial_latency_s": serial.job_latencies[j.jid],
             "service_core_s": j.service,
-            "demand_core_s": j.demand,
+            # the demand the admission tier priced the job at; under
+            # --feedback ewma the live Job.demand is REMAINING demand
+            # (0 once finished), which is not what this field reports
+            "demand_core_s": (j.admitted_demand
+                              if j.admitted_demand is not None
+                              else j.demand),
             "preemptions": j.preemptions,      # launches revoked FROM j
             **({"deadline_s": j.deadline,
                 "deadline_met": (j.latency is not None
@@ -132,7 +167,12 @@ def main() -> None:
         "slowdown_fairness_sched_jain": res.slowdown_fairness(
             serial.job_makespans, include_queue_wait=False),
         "preemptions": res.n_preemptions,
+        "feedback": args.feedback,
+        **({"feedback_stats": res.feedback_stats}
+           if res.feedback_stats is not None else {}),
         "plan_cache": res.cache_stats,
+        **({"plan_cache_path": str(cache_path)}
+           if cache_path is not None else {}),
         "serial_profiling_probes": serial.profiling_probes,
         **({"parity_check": parity} if parity is not None else {}),
     }, indent=1))

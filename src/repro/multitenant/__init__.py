@@ -9,7 +9,8 @@ Layers (each builds on ``repro.core``, none of core depends back):
                 critical-path pricing for deadline slack)
   plancache  -- cross-job curve cache (keyed by the op's full analytic
                 profile) so one tenant's profiling probes amortize over
-                every tenant
+                every tenant; persists across process restarts as
+                versioned JSON (dump/load, LRU + stats preserved)
   pool       -- PoolScheduler: thin multi-job adapter over the shared
                 ``repro.core.strategy.StrategyCore`` (job-aware Strategy-2
                 clamp, cross-job interference blacklist, weighted fair

@@ -31,6 +31,7 @@ import itertools
 
 from repro.core.concurrency import ConcurrencyController, ConcurrencyPlan
 from repro.core.graph import OpGraph
+from repro.core.planstore import PlanStore, critical_path_from
 
 
 @dataclasses.dataclass
@@ -46,10 +47,23 @@ class Job:
     # filled at profiling/admission time
     plan: ConcurrencyPlan | None = None
     controller: ConcurrencyController | None = None
-    demand: float = 0.0               # predicted core-seconds (perfmodel)
+    # the job's closed-loop plan store (repro.core.planstore): every
+    # prediction the pool consumes for this job flows through it, and
+    # under feedback="ewma" the pool's observations flow back — demand
+    # and cp below are DERIVED from it and re-derived on completions
+    store: PlanStore | None = None
+    demand: float = 0.0               # predicted core-seconds (perfmodel);
+    #                                   under feedback="ewma" this is the
+    #                                   REMAINING corrected demand, updated
+    #                                   as ops complete
     # uid -> predicted critical path from that node to job completion,
-    # inclusive (filled at profiling time; prices deadline slack per node)
+    # inclusive (filled at profiling time; prices deadline slack per node;
+    # re-derived from observations under feedback="ewma")
     cp: dict[int, float] = dataclasses.field(default_factory=dict)
+    # demand in force when the job was admitted (reporting: under
+    # feedback="ewma" the live ``demand`` decays to 0 as ops complete,
+    # so "what was this tenant priced at" needs its own field)
+    admitted_demand: float | None = None
     # accounting, maintained by the pool
     admit_time: float | None = None
     finish_time: float | None = None
@@ -136,23 +150,16 @@ def downstream_critical_path(graph: OpGraph,
     chain).  This is the remaining-work estimate that converts a job
     deadline into per-node slack: a ready node with
     ``deadline - now - cp[uid] <= 0`` cannot make its SLO even if granted
-    cores immediately, which is the pool's preemption trigger."""
+    cores immediately, which is the pool's preemption trigger.
+
+    This is the FROZEN-plan view (the pre-feedback behavior, kept for
+    callers without a store); the pool derives ``Job.cp`` through
+    ``PlanStore.remaining_critical_path``, which additionally applies
+    observation corrections and drops completed nodes under
+    ``feedback="ewma"``."""
     pred = {uid: plan.per_instance[op.size_key].predicted_time
             for uid, op in graph.ops.items()}
-    # reverse topological order via Kahn on consumer counts (graph uids are
-    # usually topo-ordered already, but don't rely on it)
-    out_deg = {uid: len(graph.consumers(uid)) for uid in graph.ops}
-    stack = [uid for uid, n in out_deg.items() if n == 0]
-    cp: dict[int, float] = {}
-    while stack:
-        uid = stack.pop()
-        cp[uid] = pred[uid] + max(
-            (cp[c] for c in graph.consumers(uid)), default=0.0)
-        for d in graph.ops[uid].deps:
-            out_deg[d] -= 1
-            if out_deg[d] == 0:
-                stack.append(d)
-    return cp
+    return critical_path_from(graph, pred)
 
 
 class JobQueue:
@@ -201,6 +208,12 @@ class JobQueue:
 
     def peek(self) -> Job | None:
         return self._waiting[0][4] if self._waiting else None
+
+    def waiting_jobs(self) -> list[Job]:
+        """Snapshot of queued jobs in admission order (the pool's
+        feedback path re-derives their demand/cp before admission checks
+        so the cap prices tenants at TODAY's estimates)."""
+        return [job for *_, job in self._waiting]
 
     def next_arrival(self, now: float) -> float | None:
         """Earliest submit_time strictly in the future, or None."""

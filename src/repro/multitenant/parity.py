@@ -13,6 +13,21 @@ executable form of that claim, shared by three consumers:
   checks on the bench mix;
 * ``python -m repro.launch.pool --check-parity`` — CLI preflight.
 
+The closed-loop plan store has its own parity obligation: a
+``feedback="ewma"`` scheduler fed a ZERO-ERROR observation stream (every
+observation exactly matches its prediction) must reproduce the
+``feedback="off"`` timeline bitwise, because a ratio-1.0 observation may
+not move any correction off 1.0 and a 1.0 correction may not change any
+prediction.  ``check_parity`` runs that leg too (``zero_error=True``
+flips the correction table into treat-every-observation-as-exact mode),
+so accidental drift in the blend math fails the same smoke as a
+strategy-rule drift.  Scope: the lock covers the PREDICTION path — the
+configurations it runs are single-tenant and cap-free.  A multi-tenant
+pool with a demand cap may legitimately diverge even on a zero-error
+trace, because ``feedback="ewma"`` prices admission at REMAINING demand
+(completed ops drop out), which is a deliberate semantic of the mode,
+not blend drift.
+
 Divergence reports name the first mismatching record field-by-field so a
 strategy-rule drift between the adapters is diagnosable from CI output
 alone.
@@ -20,6 +35,7 @@ alone.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Iterable
 
 from repro.core.graph import OpGraph, build_paper_graph
@@ -34,16 +50,27 @@ _ROW_FIELDS = ("uid", "op_class", "threads", "variant", "hyper",
 
 
 def corun_timeline(graph: OpGraph, machine: SimMachine | None = None,
-                   config: RuntimeConfig | None = None) -> ScheduleResult:
-    """Profile + schedule one graph with the single-graph scheduler."""
+                   config: RuntimeConfig | None = None, *,
+                   zero_error: bool = False) -> ScheduleResult:
+    """Profile + schedule one graph with the single-graph scheduler.
+
+    ``zero_error=True`` (meaningful only with ``config.feedback="ewma"``)
+    flips the runtime's correction table into the parity mode where every
+    observation is treated as exactly matching its prediction — the
+    resulting timeline must be bitwise the ``feedback="off"`` one."""
     rt = ConcurrencyRuntime(machine=machine or SimMachine(), config=config)
     rt.profile(graph)
+    if zero_error:
+        corrections = getattr(rt.planstore, "corrections", None)
+        if corrections is not None:
+            corrections.zero_error = True
     return rt.execute_step(graph)
 
 
 def pool_timeline(graph: OpGraph, machine: SimMachine | None = None,
                   config: RuntimeConfig | None = None, *,
-                  pool_config: PoolConfig | None = None) -> ScheduleResult:
+                  pool_config: PoolConfig | None = None,
+                  zero_error: bool = False) -> ScheduleResult:
     """The same graph as the ONLY tenant of a RuntimePool.
 
     ``pool_config`` overrides the default single-tenant pool setup, so
@@ -51,7 +78,9 @@ def pool_timeline(graph: OpGraph, machine: SimMachine | None = None,
     preemption-enabled pool with no deadlines must still reproduce the
     single-graph scheduler bit-for-bit).  It is exclusive with ``config``
     — silently preferring one would let a parity test vouch for a
-    configuration it never ran."""
+    configuration it never ran.  ``zero_error`` mirrors
+    ``corun_timeline``: with ``feedback="ewma"`` the pool's shared
+    correction table treats every observation as exact."""
     if pool_config is not None and config is not None:
         raise ValueError("pass either config or pool_config, not both "
                          "(set pool_config.runtime instead)")
@@ -59,6 +88,8 @@ def pool_timeline(graph: OpGraph, machine: SimMachine | None = None,
         pool_config = PoolConfig(max_active=1,
                                  runtime=config or RuntimeConfig())
     pool = RuntimePool(machine=machine or SimMachine(), config=pool_config)
+    if zero_error and pool.corrections is not None:
+        pool.corrections.zero_error = True
     job = pool.submit(graph)
     res = pool.run()
     return res.per_job_schedule(job.jid)
@@ -95,23 +126,42 @@ def compare_timelines(a: list[dict], b: list[dict], *,
 def check_parity(models: Iterable[str] = ("resnet50", "dcgan"), *,
                  seed: int = 0, scale: int = 1,
                  config: RuntimeConfig | None = None) -> dict:
-    """Pool-vs-corun parity over paper-zoo models.
+    """Pool-vs-corun parity over paper-zoo models, plus the closed-loop
+    zero-error leg.
+
+    Per model, FOUR timelines must agree bitwise with the single-graph
+    ``feedback="off"`` reference: the single-job pool (the strategy-core
+    differential), and both schedulers re-run with ``feedback="ewma"`` on
+    a zero-error observation stream (the blend-math lock — an exact
+    observation may not move any prediction).
 
     Returns ``{"ok": bool, "models": {name: {"ok", "makespan",
-    "divergences"}}}``.  Uses two equal-seeded machines (the sim machine
-    is a deterministic function of its seed, so equal seeds mean an
-    identical timing function).  ``scale``/``config`` must match the run
-    being vouched for — parity on a scale-1 graph says nothing about a
+    "divergences"}}}``.  Uses equal-seeded machines (the sim machine is a
+    deterministic function of its seed, so equal seeds mean an identical
+    timing function).  ``scale``/``config`` must match the run being
+    vouched for — parity on a scale-1 graph says nothing about a
     divergence only reachable with a larger ready frontier."""
     report: dict = {"ok": True, "models": {}}
+    base = config or RuntimeConfig()
+    fb = dataclasses.replace(base, feedback="ewma")
     for model in dict.fromkeys(models):        # dedupe, keep order
         graph = build_paper_graph(model, scale=scale)
         single = corun_timeline(graph, SimMachine(seed=seed), config)
-        pooled = pool_timeline(graph, SimMachine(seed=seed), config)
-        divs = compare_timelines(timeline_rows(single), timeline_rows(pooled))
-        if single.makespan != pooled.makespan:
-            divs.insert(0, f"makespan: corun={single.makespan!r} "
-                           f"pool={pooled.makespan!r}")
+        ref = timeline_rows(single)
+        legs = {
+            "pool": pool_timeline(graph, SimMachine(seed=seed), config),
+            "corun-ewma0": corun_timeline(graph, SimMachine(seed=seed),
+                                          fb, zero_error=True),
+            "pool-ewma0": pool_timeline(graph, SimMachine(seed=seed), fb,
+                                        zero_error=True),
+        }
+        divs: list[str] = []
+        for label, res in legs.items():
+            d = compare_timelines(ref, timeline_rows(res), label_b=label)
+            if single.makespan != res.makespan:
+                d.insert(0, f"makespan: corun={single.makespan!r} "
+                            f"{label}={res.makespan!r}")
+            divs.extend(d)
         report["models"][model] = {
             "ok": not divs,
             "makespan": single.makespan,

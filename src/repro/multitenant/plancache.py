@@ -16,14 +16,59 @@ hide different cost parameters (e.g. transformer depth lives in flops).
 consulted by ``HillClimbProfiler.profile_graph``; it additionally keeps
 hit/probe accounting so benchmarks can report how many probes the pool
 saved versus profiling every job in isolation.
+
+Persistence: the cache is the curve BACKEND of the closed-loop plan API
+(``repro.core.planstore``), and curves measure the machine — so they are
+worth keeping across process restarts.  ``dump(path)``/``load(path)``
+serialize the full cache state (curves, LRU recency order, hit/probe/
+eviction accounting, the machine-fingerprint binding) as versioned JSON.
+A corrupted, truncated, or version-mismatched file degrades to an empty
+cache with a warning — a cold cache re-measures, a wrong curve would
+mis-schedule silently, so load NEVER guesses.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
+import pathlib
+import warnings
 from typing import Hashable
 
 from repro.core.perfmodel import CurveModel
+
+# bump whenever the on-disk layout changes; load() refuses other versions
+SCHEMA_VERSION = 1
+
+
+def _freeze(x):
+    """JSON arrays -> tuples, recursively (cache keys are tuples —
+    ``cross_graph_key`` — and JSON round-trips them as lists)."""
+    if isinstance(x, list):
+        return tuple(_freeze(v) for v in x)
+    return x
+
+
+def _curve_to_json(curve: CurveModel) -> dict:
+    return {
+        # bool dict keys become "true"/"false" strings explicitly (json
+        # would coerce them anyway, but implicitly — be deliberate)
+        "samples": {str(v).lower(): [[t, y] for t, y in pts]
+                    for v, pts in curve.samples.items()},
+        "case_lists": {str(v).lower(): list(cases)
+                       for v, cases in curve.case_lists.items()},
+        "probes": curve.probes,
+    }
+
+
+def _curve_from_json(d: dict) -> CurveModel:
+    return CurveModel(
+        samples={k == "true": [(int(t), float(y)) for t, y in pts]
+                 for k, pts in d["samples"].items()},
+        case_lists={k == "true": [int(t) for t in cases]
+                    for k, cases in d["case_lists"].items()},
+        probes=int(d["probes"]),
+    )
 
 
 @dataclasses.dataclass
@@ -50,6 +95,10 @@ class PlanCache:
     evictions: int = 0          # LRU evictions (bounded caches only)
     probes_evicted: int = 0     # probes paid for curves later evicted
     machine_fingerprint: Hashable | None = None
+    # repr of the fingerprint this cache was PERSISTED under (a loaded
+    # cache can't reconstruct the live tuple — spec objects don't survive
+    # JSON — so the binding check compares canonical reprs instead)
+    loaded_fingerprint: str | None = None
 
     def bind_machine(self, fingerprint: Hashable) -> None:
         """Pin the cache to one profiling context (timing function +
@@ -57,8 +106,17 @@ class PlanCache:
         a machine through a probe grid; sharing one cache across different
         machines or probe intervals would serve wrong curves with no
         error, so the first binder wins and any different context is
-        rejected."""
+        rejected.  A cache loaded from disk carries its persisted
+        context's repr and rejects a different live context the same
+        way."""
         if self.machine_fingerprint is None:
+            if (self.loaded_fingerprint is not None
+                    and repr(fingerprint) != self.loaded_fingerprint):
+                raise ValueError(
+                    "PlanCache was persisted under a different machine/"
+                    f"profiling context ({self.loaded_fingerprint} != "
+                    f"{fingerprint!r}); use one cache per machine and "
+                    "probe interval")
             self.machine_fingerprint = fingerprint
         elif self.machine_fingerprint != fingerprint:
             raise ValueError(
@@ -91,6 +149,72 @@ class PlanCache:
                 self.probes_evicted += self.curves[oldest].probes
                 del self.curves[oldest]
                 self.evictions += 1
+
+    # ---- persistence --------------------------------------------------
+    def dump(self, path: str | pathlib.Path) -> None:
+        """Serialize the full cache state as versioned JSON.
+
+        Entries are written in dict order = LRU order (oldest first), so
+        a load re-inserts them in the same order and recency survives the
+        round trip.  Floats round-trip exactly through ``json`` (Python
+        serializes shortest-repr doubles), so a reloaded curve predicts
+        bit-identical times."""
+        fp = (repr(self.machine_fingerprint)
+              if self.machine_fingerprint is not None
+              else self.loaded_fingerprint)
+        payload = {
+            "schema": SCHEMA_VERSION,
+            "machine_fingerprint": fp,
+            "max_entries": self.max_entries,
+            "stats": {
+                "hits": self.hits, "misses": self.misses,
+                "probes_saved": self.probes_saved,
+                "evictions": self.evictions,
+                "probes_evicted": self.probes_evicted,
+            },
+            # json serializes tuples as arrays recursively; _freeze on
+            # load restores them (non-tuple keys pass through untouched)
+            "entries": [{"key": k, "curve": _curve_to_json(c)}
+                        for k, c in self.curves.items()],
+        }
+        pathlib.Path(path).write_text(json.dumps(payload))
+
+    @classmethod
+    def load(cls, path: str | pathlib.Path) -> "PlanCache":
+        """Deserialize a cache ``dump`` wrote.
+
+        Any failure — unreadable file, malformed JSON, wrong schema
+        version, mangled entries — degrades to an EMPTY cache with a
+        warning rather than raising: persistence is an optimization, and
+        a cold cache merely re-measures, while crashing the launcher (or
+        worse, half-loading curves) would cost more than it saves."""
+        try:
+            payload = json.loads(pathlib.Path(path).read_text())
+            if not isinstance(payload, dict):
+                raise ValueError("top-level JSON is not an object")
+            schema = payload.get("schema")
+            if schema != SCHEMA_VERSION:
+                raise ValueError(
+                    f"schema version {schema!r} != {SCHEMA_VERSION}")
+            stats = payload["stats"]
+            cache = cls(
+                max_entries=payload["max_entries"],
+                hits=int(stats["hits"]), misses=int(stats["misses"]),
+                probes_saved=int(stats["probes_saved"]),
+                evictions=int(stats["evictions"]),
+                probes_evicted=int(stats["probes_evicted"]),
+                loaded_fingerprint=payload["machine_fingerprint"],
+            )
+            for entry in payload["entries"]:
+                cache.curves[_freeze(entry["key"])] = _curve_from_json(
+                    entry["curve"])
+            return cache
+        except Exception as e:  # noqa: BLE001 - degrade, never crash
+            warnings.warn(
+                f"PlanCache.load({path!s}): {e!r} — falling back to an "
+                "empty cache (curves will be re-measured)",
+                stacklevel=2)
+            return cls()
 
     # ---- accounting ---------------------------------------------------
     @property

@@ -15,13 +15,22 @@ therefore reproduces ``CorunScheduler`` timelines exactly — enforced by
 ``repro.multitenant.parity`` and ``tests/test_strategy_differential.py``.
 
 Cross-job decisions need a currency; following value-function schedulers
-(Steiner et al.) we use the ``perfmodel`` predictions already frozen in
-each job's plan: a job's *demand* is its predicted core-seconds, its
-*service* the core-seconds actually granted, and the pool always prefers
-the job with the smallest priority-weighted service (weighted fair share).
-Service is charged at launch so the share is responsive within one
-scheduling instant; hyper-thread launches are charged at the machine's
-hyper-thread efficiency (they borrow spare lanes, not whole cores).
+(Steiner et al.) we use the ``perfmodel`` predictions behind each job's
+plan: a job's *demand* is its predicted core-seconds, its *service* the
+core-seconds actually granted, and the pool always prefers the job with
+the smallest priority-weighted service (weighted fair share).  Service is
+charged at launch so the share is responsive within one scheduling
+instant; hyper-thread launches are charged at the machine's hyper-thread
+efficiency (they borrow spare lanes, not whole cores).
+
+Every prediction flows through each job's closed-loop ``PlanStore``
+(``repro.core.planstore``): with ``feedback="off"`` (default) that is
+the frozen profiling-time plan, bit-for-bit the pre-feedback pool; with
+``feedback="ewma"`` the pool's launch/finish/revoke observations blend
+back into one pool-wide ``CorrectionTable`` and ``Job.demand``/``Job.cp``
+are re-derived as ops complete (and re-priced for waiting jobs before
+every admission decision), so the admission cap and deadline slack track
+observed reality when profiles mispredict.
 
 Deadlines ride on top of fair share: a job may carry an absolute
 ``deadline``, priced into per-node slack via its frozen-plan critical
@@ -52,13 +61,14 @@ from typing import Mapping, Sequence
 from repro.core.concurrency import OpPlan
 from repro.core.graph import Op, OpGraph
 from repro.core.interference import InterferenceRecorder
+from repro.core.planstore import (OBS_FINISH, OBS_REVOKE, CorrectionTable,
+                                  OpObservation, make_plan_store)
 from repro.core.runtime import ConcurrencyRuntime, RuntimeConfig
 from repro.core.simmachine import SimMachine
 from repro.core.strategy import (PreemptionPolicy, ScheduledOp,
                                  ScheduleResult, StrategyAdapter,
                                  StrategyConfig, StrategyCore)
-from repro.multitenant.job import (Job, JobQueue, downstream_critical_path,
-                                   fairness_index, jain)
+from repro.multitenant.job import Job, JobQueue, fairness_index, jain
 from repro.multitenant.plancache import PlanCache
 
 NodeKey = tuple[int, int]           # (jid, uid)
@@ -88,6 +98,10 @@ class PoolConfig:
     # when explicitly set, so flat pools stay bit-identical to the
     # single-graph scheduler
     topology: str | None = None
+    # closed-loop plan feedback ("off" | "ewma" — see repro.core.planstore);
+    # defaults to the RuntimeConfig setting like the knobs above, so
+    # feedback-free pools stay bit-identical to the PR-4 schedulers
+    feedback: str | None = None
     runtime: RuntimeConfig = dataclasses.field(default_factory=RuntimeConfig)
 
     def strategy_config(self) -> StrategyConfig:
@@ -100,6 +114,7 @@ class PoolConfig:
             ("min_fallback_cores", self.min_fallback_cores),
             ("fallback_slack", self.fallback_slack),
             ("topology", self.topology),
+            ("feedback", self.feedback),
             ("preemption", self.preemption)) if v is not None}
         return dataclasses.replace(cfg, **overrides) if overrides else cfg
 
@@ -120,6 +135,10 @@ class _PoolSim:
         self.heap: list[tuple[float, int, NodeKey]] = []
         self.running: dict[NodeKey, ScheduledOp] = {}
         self.records: dict[int, list[ScheduledOp]] = {}
+        # jid -> completed uids (maintained incrementally: the feedback
+        # path re-derives remaining demand/critical-paths on every
+        # completion and must not rebuild this set from records each time)
+        self.completed: dict[int, set[int]] = {}
         # jid -> partial runs cut short by preemption (finish = revoke
         # time); kept OUT of ``records`` so "every op exactly once"
         # invariants keep holding on the completed timeline
@@ -136,6 +155,7 @@ class _PoolSim:
         self.pending[job.jid] = {u: len(op.deps) for u, op in g.ops.items()}
         self.ready[job.jid] = sorted(g.sources())
         self.records[job.jid] = []
+        self.completed[job.jid] = set()
         self.preempted[job.jid] = []
 
     def op(self, key: NodeKey) -> Op:
@@ -188,6 +208,7 @@ class _PoolSim:
         self._live_seq.pop(key, None)
         sched = self.running.pop(key)
         self.records[jid].append(sched)
+        self.completed[jid].add(uid)
         for c in self.graphs[jid].consumers(uid):
             self.pending[jid][c] -= 1
             if self.pending[jid][c] == 0:
@@ -214,6 +235,9 @@ class PoolResult:
     # jid -> partial runs cut short by preemption (finish = revoke time)
     preempted: dict[int, list[ScheduledOp]] = dataclasses.field(
         default_factory=dict)
+    # CorrectionTable.stats() of the pool's shared EWMA state (None when
+    # the pool ran with feedback="off")
+    feedback_stats: dict[str, float] | None = None
 
     @property
     def total_ops(self) -> int:
@@ -331,17 +355,17 @@ class _PoolAdapter(StrategyAdapter):
 
     def instance_plan(self, key: NodeKey) -> OpPlan:
         job = self._job(key)
-        assert job.plan is not None and job.controller is not None
+        assert job.plan is not None and job.store is not None
         op = self.sim.op(key)
-        base = job.plan.plan_for(op, strategy2=self.strategy2)
-        curve = job.controller.store.curve(op)
-        return OpPlan(base.threads, base.variant,
-                      curve.predict(base.threads, base.variant))
+        # the store re-prices the frozen plan's width (corrected under
+        # feedback="ewma", verbatim curve prediction under "off")
+        return job.store.replan(op, job.plan.plan_for(
+            op, strategy2=self.strategy2))
 
     def candidates_for(self, key: NodeKey, k: int) -> list[OpPlan]:
         job = self._job(key)
-        assert job.controller is not None
-        return job.controller.candidates_for(self.sim.op(key), k)
+        assert job.store is not None
+        return job.store.candidates(self.sim.op(key), k)
 
     def clamp(self, key: NodeKey, proposal: OpPlan) -> OpPlan:
         job = self._job(key)
@@ -350,9 +374,8 @@ class _PoolAdapter(StrategyAdapter):
 
     def predict(self, key: NodeKey, threads: int, variant: bool) -> float:
         job = self._job(key)
-        assert job.controller is not None
-        return job.controller.store.curve(self.sim.op(key)).predict(
-            threads, variant)
+        assert job.store is not None
+        return job.store.predict(self.sim.op(key), threads, variant)
 
     def commit(self, key: NodeKey, sched: ScheduledOp) -> None:
         self.sim.launch(key, sched)
@@ -372,6 +395,30 @@ class _PoolAdapter(StrategyAdapter):
 
     def placement_hint(self, key: NodeKey) -> int | None:
         return self._job(key).last_quadrant
+
+    # ---- closed-loop observation ----------------------------------------
+    def observe(self, key: NodeKey, sched: ScheduledOp, kind: str,
+                elapsed: float) -> None:
+        """Forward the event to the job's plan store and — when the store
+        is adaptive — re-derive the aggregates the pool caches on the Job:
+        remaining demand (the admission/fair-share currency tightens or
+        relaxes as observations land and ops complete) and per-node
+        critical paths (so deadline slack prices REMAINING work at
+        observed speeds, not the frozen profiling-time guess — the
+        ROADMAP's stale-``Job.cp`` item)."""
+        job = self._job(key)
+        assert job.store is not None
+        job.store.observe(OpObservation(
+            op=sched.op, threads=sched.threads, variant=sched.variant,
+            hyper=sched.hyper, predicted=sched.predicted,
+            observed=elapsed, kind=kind))
+        if job.store.adaptive and kind in (OBS_FINISH, OBS_REVOKE):
+            assert job.plan is not None
+            done = self.sim.completed[key[0]]
+            job.demand = job.store.remaining_demand(job.graph, job.plan,
+                                                    done)
+            job.cp = job.store.remaining_critical_path(job.graph, job.plan,
+                                                       done)
 
     # ---- deadlines / preemption ----------------------------------------
     def deadline_slack(self, key: NodeKey) -> float | None:
@@ -453,9 +500,15 @@ class RuntimePool:
 
     def __init__(self, machine: SimMachine | None = None,
                  config: PoolConfig | None = None,
-                 plan_cache: PlanCache | None = None):
+                 plan_cache: PlanCache | None = None,
+                 profile_machine: SimMachine | None = None):
         self.machine = machine or SimMachine()
         self.config = config or PoolConfig()
+        # profiling may run on a DIFFERENT timing context than execution
+        # (stale curves, a drifted machine) — the misprediction scenario
+        # the feedback="ewma" store exists to correct.  Default: profile
+        # where you execute, the paper's setup.
+        self.profile_machine = profile_machine or self.machine
         self.plan_cache = plan_cache if plan_cache is not None else PlanCache()
         self.recorder = InterferenceRecorder(
             threshold=self.config.runtime.interference_threshold)
@@ -465,6 +518,13 @@ class RuntimePool:
             reservation_window=self.config.reservation_window)
         self.scheduler = PoolScheduler(self.machine, self.config,
                                        recorder=self.recorder)
+        # ONE correction table spans every tenant (keyed by the same
+        # cross_graph_key the PlanCache shares curves under): an op class
+        # one tenant's observations re-estimated is re-estimated for all
+        self.feedback = self.config.strategy_config().feedback
+        self.corrections = (CorrectionTable()
+                            if self.feedback != "off" else None)
+        self._refreshed_at = 0      # corrections.observed at last refresh
         self.jobs: list[Job] = []
         self._jid = itertools.count()
 
@@ -473,23 +533,23 @@ class RuntimePool:
         # one profiling pipeline for both the pool and the per-step
         # runtime: delegate to ConcurrencyRuntime.profile (which also
         # binds the cache to this machine)
-        rt = ConcurrencyRuntime(machine=self.machine,
+        rt = ConcurrencyRuntime(machine=self.profile_machine,
                                 config=self.config.runtime,
                                 plan_cache=cache)
         rt.profile(job.graph)
         assert rt.controller is not None and rt.plan is not None
         job.controller = rt.controller
         job.plan = rt.plan
+        # the job's closed-loop plan store: frozen curves under
+        # feedback="off", the pool-wide EWMA corrections under "ewma"
+        job.store = make_plan_store(self.feedback, rt.controller,
+                                    corrections=self.corrections)
         # predicted demand in core-seconds — the admission/fair-share
-        # currency (perfmodel predictions, not measurements)
-        demand = 0.0
-        for op in job.graph.ops.values():
-            p = job.plan.per_instance[op.size_key]
-            demand += p.predicted_time * p.threads
-        job.demand = demand
-        # per-node remaining-work estimate: prices deadline slack for the
-        # preemption path (cheap — one reverse-topo pass over frozen plans)
-        job.cp = downstream_critical_path(job.graph, job.plan)
+        # currency — and the per-node remaining-work estimate that prices
+        # deadline slack, both DERIVED from the store (so a warm
+        # correction table already informs admission of a new tenant)
+        job.demand = job.store.remaining_demand(job.graph, job.plan)
+        job.cp = job.store.remaining_critical_path(job.graph, job.plan)
 
     # ---- public API -----------------------------------------------------
     def submit(self, graph: OpGraph, *, priority: float = 1.0,
@@ -506,12 +566,37 @@ class RuntimePool:
         self.queue.submit(job)
         return job
 
+    def _refresh_waiting_estimates(self) -> None:
+        """Under ``feedback="ewma"``, re-derive every WAITING job's demand
+        and critical paths from the shared correction table before an
+        admission decision: a job profiled (and priced) before any
+        observations landed would otherwise enter admission — and the
+        deadline-slack check — with stale submit-time estimates, which is
+        exactly the frozen-plan staleness the feedback loop exists to
+        fix.  (Active jobs are refreshed by the observe path as their own
+        ops complete.)  A no-op with feedback off or nothing observed
+        yet, so the default pool is bit-for-bit unchanged; skipped when
+        no NEW observation landed since the last refresh (a waiting job's
+        estimates can only change through the correction table)."""
+        if self.corrections is None or not self.corrections.observed:
+            return
+        if self.corrections.observed == self._refreshed_at:
+            return
+        self._refreshed_at = self.corrections.observed
+        for job in self.queue.waiting_jobs():
+            if job.store is not None and job.plan is not None:
+                job.demand = job.store.remaining_demand(job.graph, job.plan)
+                job.cp = job.store.remaining_critical_path(job.graph,
+                                                           job.plan)
+
     def _admit(self, sim: _PoolSim, active: list[Job]) -> None:
+        self._refresh_waiting_estimates()
         while True:
             job = self.queue.pop_admissible(active, now=sim.clock)
             if job is None:
                 return
             job.admit_time = sim.clock
+            job.admitted_demand = job.demand
             sim.admit(job)
             if not sim.ready[job.jid]:      # zero-op graph: done on arrival
                 job.finish_time = sim.clock
@@ -586,7 +671,14 @@ class RuntimePool:
                     sim.clock = wake
                     self._admit(sim, active)
                     continue
-                jid, _ = sim.complete_next()
+                jid, sched = sim.complete_next()
+                # close the loop: the completion's observed service flows
+                # back through the job's plan store (no-op under
+                # feedback="off"; under "ewma" it also re-derives the
+                # job's remaining demand and critical paths, so the
+                # admission check below sees the tightened values)
+                adapter.observe((jid, sched.op.uid), sched, OBS_FINISH,
+                                sched.duration)
                 job = next(j for j in active if j.jid == jid)
                 job.ops_done += 1
                 if sim.job_done(jid):
@@ -596,7 +688,9 @@ class RuntimePool:
         return PoolResult(makespan=sim.clock, jobs=list(self.jobs),
                           records=sim.records, events=sim.events,
                           cache_stats=self.plan_cache.stats(),
-                          preempted=sim.preempted)
+                          preempted=sim.preempted,
+                          feedback_stats=(self.corrections.stats()
+                                          if self.corrections else None))
 
     # ---- baseline -------------------------------------------------------
     def run_serial(self, *, share_cache: bool = False) -> SerialResult:

@@ -1,0 +1,486 @@
+"""Closed-loop plan store: blend math, parity locks, re-estimation,
+PlanCache persistence, and the real-executor observe path.
+
+Deterministic twins of the hypothesis properties live here too (the
+container may lack hypothesis; CI runs both).
+"""
+
+import json
+import math
+import warnings
+
+import pytest
+
+from repro.core import (AdaptivePlanStore, ConcurrencyRuntime,
+                        CorrectionTable, CurveModel, GraphBuilder,
+                        OpObservation, OBS_FINISH, OBS_LAUNCH, OBS_REVOKE,
+                        PreemptionPolicy, RealGraphExecutor, RuntimeConfig,
+                        SimMachine, build_paper_graph, make_plan_store)
+from repro.core.perfmodel import cross_graph_key
+from repro.multitenant import (JobQueue, PlanCache, PoolConfig, RuntimePool,
+                               compare_timelines, corun_timeline,
+                               pool_timeline, timeline_rows)
+
+
+@pytest.fixture(scope="module")
+def machine():
+    return SimMachine()
+
+
+class OverpredictingMachine(SimMachine):
+    """A profiling context uniformly 3x slower than the real machine —
+    the stale-profile scenario the feedback loop corrects."""
+
+    def op_time(self, op, placement, *, bw_share=1.0):
+        return super().op_time(op, placement, bw_share=bw_share) * 3.0
+
+    @property
+    def fingerprint(self):
+        return (*super().fingerprint, "x3")
+
+
+def _chain(name, n, cls="X", shape=(32, 16, 16, 64)):
+    b = GraphBuilder(name)
+    prev = None
+    for _ in range(n):
+        prev = b.add(cls, shape, flops=4e8, bytes_moved=2e6,
+                     deps=[prev] if prev is not None else [])
+    return b.build()
+
+
+# ---------------------------------------------------------------------------
+# CorrectionTable blend math
+# ---------------------------------------------------------------------------
+
+class TestCorrectionTable:
+    def test_incremental_ewma_moves_toward_ratio(self):
+        t = CorrectionTable(alpha=0.25)
+        t.update("k", 8, True, 2.0)
+        assert t.factor("k", 8, True) == pytest.approx(1.25)
+        t.update("k", 8, True, 2.0)
+        assert t.factor("k", 8, True) == pytest.approx(1.4375)
+
+    def test_converges_to_observed_ratio(self):
+        t = CorrectionTable(alpha=0.25)
+        for _ in range(40):
+            t.update("k", 8, True, 0.5)
+        assert t.factor("k", 8, True) == pytest.approx(0.5, rel=1e-3)
+
+    def test_ratio_clamped_to_bounds(self):
+        t = CorrectionTable(alpha=1.0)
+        t.update("k", 8, True, 1e9)
+        assert t.factor("k", 8, True) == t.ratio_bounds[1]
+        t.update("k", 8, True, 0.0)
+        assert t.factor("k", 8, True) == t.ratio_bounds[0]
+
+    def test_exact_observations_are_exactly_stable(self):
+        """The parity-critical property: ratio-1.0 observations leave the
+        correction at EXACTLY 1.0 (no float drift), for any alpha."""
+        for alpha in (0.25, 0.3, 0.1, 0.7):
+            t = CorrectionTable(alpha=alpha)
+            for _ in range(100):
+                t.update("k", 8, True, 1.0)
+            assert t.factor("k", 8, True) == 1.0
+
+    def test_overall_key_fallback_for_unobserved_width(self):
+        t = CorrectionTable(alpha=1.0)
+        t.update("k", 8, True, 2.0)
+        # exact point seen -> point correction; other width -> key-level
+        assert t.factor("k", 8, True) == 2.0
+        assert t.factor("k", 16, False) == 2.0
+        assert t.factor("other", 8, True) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# zero-error parity: feedback="ewma" on an exact trace == feedback="off"
+# ---------------------------------------------------------------------------
+
+class TestZeroErrorParity:
+    @pytest.mark.parametrize("model", ["dcgan", "resnet50"])
+    def test_corun_ewma_zero_error_bitwise_off(self, model):
+        graph = build_paper_graph(model)
+        off = corun_timeline(graph, SimMachine(seed=0))
+        ew = corun_timeline(graph, SimMachine(seed=0),
+                            RuntimeConfig(feedback="ewma"), zero_error=True)
+        assert off.makespan == ew.makespan
+        assert not compare_timelines(timeline_rows(off), timeline_rows(ew))
+
+    @pytest.mark.parametrize("model", ["dcgan", "resnet50"])
+    def test_pool_ewma_zero_error_bitwise_off(self, model):
+        graph = build_paper_graph(model)
+        off = corun_timeline(graph, SimMachine(seed=0))
+        ew = pool_timeline(graph, SimMachine(seed=0),
+                           RuntimeConfig(feedback="ewma"), zero_error=True)
+        assert off.makespan == ew.makespan
+        assert not compare_timelines(timeline_rows(off), timeline_rows(ew))
+
+    def test_quadrant_topology_zero_error_parity(self):
+        """The zero-error lock must hold under topology="quadrant" too —
+        placement decisions consume the same predictions."""
+        graph = build_paper_graph("dcgan")
+        off = corun_timeline(graph, SimMachine(seed=0),
+                             RuntimeConfig(topology="quadrant"))
+        ew = pool_timeline(graph, SimMachine(seed=0),
+                           RuntimeConfig(topology="quadrant",
+                                         feedback="ewma"), zero_error=True)
+        assert off.makespan == ew.makespan
+        assert not compare_timelines(timeline_rows(off), timeline_rows(ew))
+
+    def test_live_ewma_observations_do_diverge(self):
+        """Control for the lock above: REAL observations (co-run durations
+        vs solo predictions) must move corrections — otherwise the
+        zero-error tests vouch for a feedback path that never fires."""
+        graph = build_paper_graph("dcgan")
+        rt = ConcurrencyRuntime(machine=SimMachine(seed=0),
+                                config=RuntimeConfig(feedback="ewma"))
+        rt.profile(graph)
+        rt.execute_step(graph)
+        corr = rt.planstore.corrections
+        assert corr.observed > 0
+        assert any(c != 1.0 for c in corr.point.values())
+
+
+# ---------------------------------------------------------------------------
+# adaptive prediction behavior
+# ---------------------------------------------------------------------------
+
+class TestAdaptivePrediction:
+    def _store(self, machine):
+        graph = _chain("g", 1)
+        rt = ConcurrencyRuntime(machine=machine)
+        rt.profile(graph)
+        op = graph.ops[0]
+        store = AdaptivePlanStore(rt.controller)
+        return graph, op, store
+
+    def _observe(self, store, op, threads, variant, factor, n=1):
+        base = store.controller.store.curve(op).predict(threads, variant)
+        for _ in range(n):
+            store.observe(OpObservation(
+                op=op, threads=threads, variant=variant, hyper=False,
+                predicted=store.predict(op, threads, variant),
+                observed=base * factor, kind=OBS_FINISH))
+        return base
+
+    def test_predictions_converge_to_observed_not_sqrt(self, machine):
+        """The blend must divide by the BASE curve prediction: dividing
+        by the (already-corrected) launch prediction converges to
+        sqrt(ratio) — after many 2x observations the prediction must sit
+        at ~2x base, well past sqrt(2)~1.41x."""
+        _, op, store = self._store(machine)
+        base = self._observe(store, op, 9, False, 2.0, n=30)
+        assert store.predict(op, 9, False) == pytest.approx(2.0 * base,
+                                                            rel=1e-3)
+
+    def test_unobserved_width_uses_key_level_correction(self, machine):
+        _, op, store = self._store(machine)
+        self._observe(store, op, 9, False, 2.0, n=30)
+        # a width never observed still benefits via the per-key fallback
+        base17 = store.controller.store.curve(op).predict(17, False)
+        assert store.predict(op, 17, False) == pytest.approx(2.0 * base17,
+                                                             rel=1e-3)
+
+    def test_candidates_reranked_by_corrections(self, machine):
+        _, op, store = self._store(machine)
+        frozen = store.controller.candidates_for(op, 3)
+        best, runner = frozen[0], frozen[1]
+        # the frozen best width observed 3x slower than profiled while the
+        # runner-up runs 2x faster: per-width corrections must flip the
+        # top seat (a single-width observation alone cannot — the per-key
+        # fallback scales unobserved widths by the same factor)
+        self._observe(store, op, best.threads, best.variant, 3.0, n=30)
+        self._observe(store, op, runner.threads, runner.variant, 0.5, n=30)
+        corrected = store.candidates(op, 3)
+        assert corrected[0].threads == runner.threads
+        assert {c.threads for c in corrected} <= \
+            {t for v, pts in
+             store.controller.store.curve(op).samples.items()
+             for t, _ in pts}
+
+    def test_launch_revoke_hyper_events_do_not_blend(self, machine):
+        _, op, store = self._store(machine)
+        pred = store.predict(op, 9, False)
+        for kind, hyper in ((OBS_LAUNCH, False), (OBS_REVOKE, False),
+                           (OBS_FINISH, True)):
+            store.observe(OpObservation(
+                op=op, threads=9, variant=False, hyper=hyper,
+                predicted=pred, observed=pred * 7.0, kind=kind))
+        assert store.corrections.observed == 0
+        assert store.corrections.revoked == 1
+        assert store.predict(op, 9, False) == pred
+
+    def test_make_plan_store_rejects_unknown_mode(self, machine):
+        _, op, store = self._store(machine)
+        with pytest.raises(ValueError, match="unknown feedback mode"):
+            make_plan_store("bogus", store.controller)
+
+
+# ---------------------------------------------------------------------------
+# online demand re-estimation (the admission currency)
+# ---------------------------------------------------------------------------
+
+class _AssertingQueue(JobQueue):
+    """JobQueue that proves the admission-cap invariant at every pop:
+    outstanding (live, possibly re-estimated) demand plus the admitted
+    job's demand never exceeds the cap while the pool is busy."""
+
+    def pop_admissible(self, active, now=float("inf")):
+        job = super().pop_admissible(active, now)
+        if (job is not None and self.max_outstanding_demand is not None
+                and active):
+            outstanding = sum(j.demand for j in active)
+            assert outstanding + job.demand \
+                <= self.max_outstanding_demand + 1e-9
+        return job
+
+
+class TestDemandReestimation:
+    def _mix_pool(self, feedback, machine, **cfg):
+        pool = RuntimePool(
+            machine=machine, profile_machine=OverpredictingMachine(),
+            config=PoolConfig(feedback=(feedback if feedback != "off"
+                                        else None), **cfg))
+        return pool
+
+    def test_finished_jobs_have_zero_remaining_demand(self, machine):
+        pool = self._mix_pool("ewma", machine, max_active=2)
+        jobs = [pool.submit(_chain(f"j{i}", 4), name=f"j{i}")
+                for i in range(2)]
+        pool.run()
+        for j in jobs:
+            assert j.done and j.demand == 0.0
+
+    def test_off_keeps_demand_frozen(self, machine):
+        pool = self._mix_pool("off", machine, max_active=2)
+        jobs = [pool.submit(_chain(f"j{i}", 4), name=f"j{i}")
+                for i in range(2)]
+        frozen = [j.demand for j in jobs]
+        pool.run()
+        assert [j.demand for j in jobs] == frozen
+        assert all(d > 0 for d in frozen)
+
+    def test_warm_corrections_reprice_admission_demand(self, machine):
+        """A tenant submitted before any observations but ADMITTED after
+        many must enter admission at corrected (here: ~1/3) demand — the
+        frozen 3x-overpredicted estimate would hold the cap hostage."""
+        pool = self._mix_pool("ewma", machine, max_active=1)
+        first = pool.submit(_chain("warm", 8), name="warm")
+        second = pool.submit(_chain("late", 8), name="late",
+                             submit_time=1e-5)
+        frozen_demand = second.demand
+        pool.run()
+        # by the time "late" was admitted, warm's 8 completions had
+        # corrected the shared key: its priced demand must have dropped
+        # toward ~1/3 of the frozen estimate (and its final is 0: done)
+        assert first.done and second.done
+        assert second.demand == 0.0
+        assert frozen_demand > 0
+
+    @pytest.mark.parametrize("feedback", ["off", "ewma"])
+    def test_admission_cap_invariant_holds(self, machine, feedback):
+        """Deterministic twin of the hypothesis property: with a demand
+        cap and (for ewma) live re-estimation, every admission satisfies
+        the cap with the demands in force at that instant."""
+        pool = self._mix_pool(feedback, machine, max_active=3)
+        pool.queue = _AssertingQueue(max_active=3)
+        jobs = [pool.submit(_chain(f"j{i}", 3 + i), name=f"j{i}",
+                            submit_time=i * 1e-4) for i in range(4)]
+        pool.queue.max_outstanding_demand = 1.5 * max(j.demand for j in jobs)
+        res = pool.run()
+        assert all(j.done for j in jobs)
+        assert res.total_ops == sum(j.graph.n_ops for j in jobs)
+
+
+# ---------------------------------------------------------------------------
+# frozen-Job.cp staleness regression (satellite: wrong preemption)
+# ---------------------------------------------------------------------------
+
+def _blocker_graph():
+    b = GraphBuilder("blocker")
+    b.add("Huge", (512, 512, 64), flops=8e9, bytes_moved=1e9,
+          working_set=1e9)
+    return b.build()
+
+
+class TestCpStalenessRegression:
+    """Profiles overpredict 3x.  A deadlined chain whose TRUE remaining
+    work comfortably fits its budget gets priced at 3x under the frozen
+    plan, so its slack goes (wrongly) negative while a long op runs —
+    and the preemption path revokes that victim, paying restart waste
+    for a deadline that was never in danger.  Under feedback="ewma" a
+    warmup tenant's observations have already corrected the shared op
+    key, the re-derived critical path prices the chain near truth,
+    slack stays positive, and nobody is preempted — while the deadline
+    is still met."""
+
+    def _run(self, feedback):
+        pool = RuntimePool(
+            machine=SimMachine(),
+            profile_machine=OverpredictingMachine(),
+            config=PoolConfig(max_active=2,
+                              feedback=(feedback if feedback != "off"
+                                        else None),
+                              preemption=PreemptionPolicy(enabled=True)))
+        pool.submit(_chain("warm", 12), name="warm", submit_time=0.0)
+        blocker = pool.submit(_blocker_graph(), name="blocker",
+                              submit_time=0.014)
+        dead = pool.submit(_chain("dead", 10), name="dead",
+                           submit_time=0.016, deadline=0.016 + 0.028)
+        res = pool.run()
+        return res, blocker, dead
+
+    def test_frozen_plan_preempts_wrongly(self):
+        res, blocker, dead = self._run("off")
+        assert res.n_preemptions >= 1, \
+            "control: the frozen plan must trigger the wrong preemption"
+        # ... even though the deadline never needed it
+        assert dead.finish_time is not None
+        assert dead.finish_time <= dead.deadline
+
+    def test_ewma_avoids_wrong_preemption_and_meets_deadline(self):
+        res_off, blk_off, _ = self._run("off")
+        res_ew, blk_ew, dead = self._run("ewma")
+        assert res_ew.n_preemptions == 0
+        assert dead.finish_time is not None
+        assert dead.finish_time <= dead.deadline
+        # the spared victim finishes earlier than under the frozen plan
+        # (no revoked partial run to re-pay)
+        assert blk_ew.latency < blk_off.latency
+
+
+# ---------------------------------------------------------------------------
+# PlanCache persistence
+# ---------------------------------------------------------------------------
+
+class TestPlanCachePersistence:
+    def _curve(self, scale=1.0):
+        return CurveModel(
+            samples={False: [(1, 0.9 * scale), (5, 0.31 * scale)],
+                     True: [(2, 0.7 * scale), (10, 0.27 * scale)]},
+            case_lists={False: [1, 2, 3, 4, 5], True: [2, 4, 6, 8, 10]},
+            probes=4)
+
+    def test_round_trip_preserves_curves_lru_and_stats(self, tmp_path):
+        cache = PlanCache(max_entries=5, hits=7, misses=3, probes_saved=28,
+                          evictions=2, probes_evicted=8)
+        keys = [("Conv2D", (32, 8, 8, 64), 1e9, 2e6, 2e6, 0.96, True),
+                ("MatMul", (16, 16), 4e8, 6e4, 6e4, 0.96, True),
+                ("Sum", (8, 8), 1e6, 5e2, 5e2, 0.65, False)]
+        for i, k in enumerate(keys):
+            cache.insert(k, self._curve(scale=1.0 + i))
+        cache.lookup(keys[0])            # refresh: LRU order now 1,2,0
+        path = tmp_path / "cache.json"
+        cache.dump(path)
+        loaded = PlanCache.load(path)
+        assert list(loaded.curves) == [keys[1], keys[2], keys[0]]
+        for k in keys:
+            a, b = cache.curves[k], loaded.curves[k]
+            assert a.samples == b.samples          # bit-exact floats
+            assert a.case_lists == b.case_lists
+            assert a.probes == b.probes
+        assert loaded.max_entries == 5
+        # lookup() above mutated hits; stats must match the dumped state
+        assert loaded.stats() == cache.stats()
+
+    def test_loaded_recency_drives_eviction(self, tmp_path):
+        cache = PlanCache(max_entries=2)
+        cache.insert("a", self._curve())
+        cache.insert("b", self._curve())
+        cache.lookup("a")                # "b" is now the LRU entry
+        path = tmp_path / "cache.json"
+        cache.dump(path)
+        loaded = PlanCache.load(path)
+        loaded.insert("c", self._curve())
+        assert set(loaded.curves) == {"a", "c"}, \
+            "persisted recency must decide who gets evicted"
+
+    def test_corrupted_file_degrades_to_empty_with_warning(self, tmp_path):
+        path = tmp_path / "cache.json"
+        path.write_text("{ this is not json")
+        with pytest.warns(UserWarning, match="falling back to an empty"):
+            loaded = PlanCache.load(path)
+        assert loaded.curves == {} and loaded.hits == 0
+
+    def test_missing_file_degrades_to_empty_with_warning(self, tmp_path):
+        with pytest.warns(UserWarning, match="falling back to an empty"):
+            loaded = PlanCache.load(tmp_path / "nope.json")
+        assert loaded.curves == {}
+
+    def test_version_mismatch_degrades_to_empty_with_warning(self, tmp_path):
+        cache = PlanCache()
+        cache.insert("a", self._curve())
+        path = tmp_path / "cache.json"
+        cache.dump(path)
+        payload = json.loads(path.read_text())
+        payload["schema"] = 999
+        path.write_text(json.dumps(payload))
+        with pytest.warns(UserWarning, match="schema version"):
+            loaded = PlanCache.load(path)
+        assert loaded.curves == {}
+
+    def test_fingerprint_binding_survives_round_trip(self, tmp_path):
+        machine = SimMachine(seed=0)
+        cache = PlanCache()
+        cache.bind_machine((machine.fingerprint, 4))
+        path = tmp_path / "cache.json"
+        cache.dump(path)
+        loaded = PlanCache.load(path)
+        # same context rebinds fine...
+        loaded.bind_machine((SimMachine(seed=0).fingerprint, 4))
+        # ...a different machine or probe interval is refused
+        loaded2 = PlanCache.load(path)
+        with pytest.raises(ValueError, match="persisted under a different"):
+            loaded2.bind_machine((SimMachine(seed=1).fingerprint, 4))
+        loaded3 = PlanCache.load(path)
+        with pytest.raises(ValueError, match="persisted under a different"):
+            loaded3.bind_machine((SimMachine(seed=0).fingerprint, 8))
+
+    def test_pool_reuses_persisted_curves_without_probes(self, tmp_path,
+                                                         machine):
+        pool = RuntimePool(machine=machine, config=PoolConfig(max_active=2))
+        pool.submit(build_paper_graph("dcgan"), name="a")
+        pool.run()
+        path = tmp_path / "cache.json"
+        pool.plan_cache.dump(path)
+        spent_before = pool.plan_cache.probes_spent
+
+        loaded = PlanCache.load(path)
+        pool2 = RuntimePool(machine=SimMachine(), plan_cache=loaded,
+                            config=PoolConfig(max_active=2))
+        pool2.submit(build_paper_graph("dcgan"), name="b")
+        res = pool2.run()
+        assert loaded.probes_spent == spent_before, \
+            "a warm persisted cache must pay zero new probes"
+        assert res.cache_stats["probes_saved"] > 0
+
+
+# ---------------------------------------------------------------------------
+# real-payload executor feeds the same observe API
+# ---------------------------------------------------------------------------
+
+class TestRealExecutorObserve:
+    def test_payload_timings_flow_into_store(self, machine):
+        b = GraphBuilder("real")
+        u0 = b.add("X", (32, 16, 16, 64), flops=4e8, bytes_moved=2e6,
+                   payload=lambda deps: sum(range(1000)))
+        b.add("X", (32, 16, 16, 64), flops=4e8, bytes_moved=2e6,
+              deps=[u0], payload=lambda deps: deps[u0] + 1)
+        graph = b.build()
+        rt = ConcurrencyRuntime(machine=machine,
+                                config=RuntimeConfig(feedback="ewma"))
+        rt.profile(graph)
+        store = rt.planstore
+        results, timings, wall = RealGraphExecutor(max_workers=2).run(
+            graph, store=store, plan=rt.plan)
+        assert len(timings) == graph.n_ops
+        assert store.corrections.observed == graph.n_ops
+        # the wall-clock observations landed on the ops' curve key
+        key = cross_graph_key(graph.ops[0])
+        assert store.corrections.overall.get(key) is not None
+
+    def test_executor_without_store_unchanged(self):
+        b = GraphBuilder("real")
+        b.add("X", (8, 8), flops=1e6, bytes_moved=1e3,
+              payload=lambda deps: 42)
+        results, timings, wall = RealGraphExecutor().run(b.build())
+        assert results[0] == 42 and 0 in timings

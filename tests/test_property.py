@@ -10,11 +10,12 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (ConcurrencyRuntime, CurveModel, GraphBuilder,
                         HillClimbProfiler, Op, OpPlan, Placement,
-                        PreemptionPolicy, SimMachine, paper_case_lists,
-                        pick_admissible)
+                        PreemptionPolicy, RuntimeConfig, SimMachine,
+                        paper_case_lists, pick_admissible)
 from repro.hw.hlo import parse_collectives, shape_bytes
-from repro.multitenant import (PoolConfig, RuntimePool, compare_timelines,
-                               corun_timeline, pool_timeline, timeline_rows)
+from repro.multitenant import (JobQueue, PoolConfig, RuntimePool,
+                               compare_timelines, corun_timeline,
+                               pool_timeline, timeline_rows)
 from repro.optim import CompressionConfig, compress, init_error_state
 
 SETTINGS = dict(max_examples=25, deadline=None)
@@ -208,7 +209,7 @@ def _blocker_graph():
     return b.build()
 
 
-def _preempting_pool(graphs, deadline_scale, topology=None):
+def _preempting_pool(graphs, deadline_scale, topology=None, feedback=None):
     """A long-op blocker tenant plus random DAG tenants arriving staggered
     with deadlines tight enough (a fraction of each job's own critical
     path) that slack pressure — and usually preemption — occurs."""
@@ -216,6 +217,7 @@ def _preempting_pool(graphs, deadline_scale, topology=None):
     pool = RuntimePool(machine=machine,
                        config=PoolConfig(
                            max_active=4, topology=topology,
+                           feedback=feedback,
                            preemption=PreemptionPolicy(enabled=True)))
     jobs = [pool.submit(_blocker_graph(), name="blocker")]
     for i, g in enumerate(graphs, start=1):
@@ -380,6 +382,82 @@ def test_flat_topology_pool_matches_corun_on_random_dags(graph):
     assert quad_single.makespan == quad_pooled.makespan
     assert not compare_timelines(timeline_rows(quad_single),
                                  timeline_rows(quad_pooled))
+
+
+# ---------------------------------------------------------------------------
+# closed-loop plan store invariants (feedback="ewma")
+# ---------------------------------------------------------------------------
+
+@settings(**DAG_SETTINGS)
+@given(graph=op_graphs())
+def test_feedback_zero_error_matches_off_on_random_dags(graph):
+    """The blend-math lock on arbitrary DAGs: feedback="ewma" fed a
+    zero-error observation stream (every observation exactly matches its
+    prediction) is bit-identical to feedback="off" — both through the
+    single-graph scheduler and through a 1-job pool."""
+    off = corun_timeline(graph, SimMachine(seed=0))
+    fb = RuntimeConfig(feedback="ewma")
+    for leg in (corun_timeline(graph, SimMachine(seed=0), fb,
+                               zero_error=True),
+                pool_timeline(graph, SimMachine(seed=0), fb,
+                              zero_error=True)):
+        assert off.makespan == leg.makespan
+        assert not compare_timelines(timeline_rows(off),
+                                     timeline_rows(leg))
+
+
+@settings(**DAG_SETTINGS)
+@given(graphs=st.lists(op_graphs(), min_size=2, max_size=3),
+       scale=st.floats(0.1, 1.5))
+def test_feedback_service_accounting_sums(graphs, scale):
+    """Service accounting stays exact under feedback + preemption: what
+    a job was charged equals completed core-seconds plus revoked partial
+    runs at the restart-waste rate — re-estimated predictions change
+    DECISIONS, never the price of granted cores."""
+    machine, pool, jobs = _preempting_pool(graphs, scale, feedback="ewma")
+    res = pool.run()
+    eff = machine.spec.hyper_thread_efficiency
+    waste = machine.spec.restart_waste
+    for job in jobs:
+        granted = sum(r.threads * r.duration * (eff if r.hyper else 1.0)
+                      for r in res.records[job.jid])
+        wasted = sum(
+            p.threads * (p.finish - p.start) * (eff if p.hyper else 1.0)
+            * waste for p in res.preempted[job.jid])
+        assert job.service == pytest.approx(granted + wasted, rel=1e-9)
+
+
+class _CapAssertingQueue(JobQueue):
+    """JobQueue that proves the admission-cap invariant at every pop
+    (deterministic twin: tests/test_planstore.py::_AssertingQueue)."""
+
+    def pop_admissible(self, active, now=float("inf")):
+        job = super().pop_admissible(active, now)
+        if (job is not None and self.max_outstanding_demand is not None
+                and active):
+            outstanding = sum(j.demand for j in active)
+            assert outstanding + job.demand \
+                <= self.max_outstanding_demand + 1e-9
+        return job
+
+
+@settings(**DAG_SETTINGS)
+@given(graphs=st.lists(op_graphs(), min_size=3, max_size=4),
+       feedback=st.sampled_from([None, "ewma"]))
+def test_feedback_demand_within_admission_cap(graphs, feedback):
+    """Re-estimated Job.demand must keep satisfying the admission-cap
+    invariant: at every pop, outstanding live demand plus the admitted
+    job's fits under the cap (checked inside the asserting queue), and
+    every job still runs to completion."""
+    pool = RuntimePool(machine=SimMachine(),
+                       config=PoolConfig(max_active=3, feedback=feedback))
+    pool.queue = _CapAssertingQueue(max_active=3)
+    jobs = [pool.submit(g, name=f"j{i}", submit_time=i * 1e-4)
+            for i, g in enumerate(graphs)]
+    pool.queue.max_outstanding_demand = 1.5 * max(j.demand for j in jobs)
+    res = pool.run()
+    assert all(j.done for j in jobs)
+    assert res.total_ops == sum(g.n_ops for g in graphs)
 
 
 @settings(**SETTINGS)
