@@ -113,6 +113,15 @@ def feedback_on_mispredicted_mix() -> list[str]:
     early, late = _log_error(ew, recs[:q]), _log_error(ew, recs[-q:])
     rows.append(f"fb/feedback_prediction_error,0,"
                 f"early={early:.3f} late={late:.3f}")
+    # correction magnitudes through the metrics registry: how far the
+    # blended corrections ended up from the (perturbed) frozen curves
+    rows.append(
+        f"fb/feedback_correction_mag,0,"
+        f"mean={ew.metrics['feedback.mean_abs_log_correction']:.3f} "
+        f"max={ew.metrics['feedback.max_abs_log_correction']:.3f}")
+    assert ew.metrics["feedback.mean_abs_log_correction"] > 0.0, (
+        "perturbed profiles must leave nonzero corrections in the "
+        "feedback.* gauges")
     assert late < early, (
         f"EWMA corrections must converge: late-run prediction error "
         f"{late:.3f} not below early-run {early:.3f}")

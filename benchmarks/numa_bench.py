@@ -69,18 +69,25 @@ def numa_placement_locality() -> list[str]:
     _, quad = _results()
     spec = MACHINE.spec
     histogram: dict[int, int] = {}
-    placed = 0
     for recs in quad.records.values():
         for r in recs:
             if r.hyper:
                 continue
-            placed += 1
             n = len({spec.quadrant_of_core(c) for c in r.cores})
             histogram[n] = histogram.get(n, 0) + 1
-    local = histogram.get(1, 0)
+    # launch/locality counts come from the metrics registry (the
+    # placement.* gauges on ``PoolResult.metrics``); the straddle
+    # histogram is recomputed from the records and cross-checks them
+    placed = int(quad.metrics["placement.launches"])
+    local = int(quad.metrics["placement.local"])
+    assert placed == sum(histogram.values()), \
+        "placement.launches gauge must match the booked records"
+    assert local == histogram.get(1, 0), \
+        "placement.local gauge must match the single-quadrant records"
     rows = [
         f"numa/quadrant_local_launches,{local},"
-        f"of={placed}({100.0*local/max(placed,1):.0f}%)",
+        f"of={placed}"
+        f"({100.0*quad.metrics['placement.local_fraction']:.0f}%)",
     ]
     for n in sorted(histogram):
         rows.append(f"numa/straddle_{n}q,{histogram[n]},launches")

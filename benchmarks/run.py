@@ -1,8 +1,14 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 #
 # ``--check-parity`` additionally runs the pool-vs-corun differential on
-# the bench mix models and FAILS the run on any timeline divergence, so
+# the bench mix models and FAILS the run on any timeline divergence
+# (including the traced leg, so tracing stays bit-for-bit inert), so
 # perf runs double as strategy-core regression checks.
+#
+# ``--trace-out PATH`` runs the fully-armed 4-job mix with decision
+# tracing enabled and writes the timeline as Chrome-trace/Perfetto JSON
+# (open at https://ui.perfetto.dev) — the nightly lane uploads it as a
+# CI artifact.
 import sys
 import traceback
 
@@ -34,15 +40,28 @@ def main() -> None:
            + list(roofline.ALL) + list(multitenant_bench.ALL)
            + list(preemption_bench.ALL) + list(numa_bench.ALL)
            + list(feedback_bench.ALL))
-    args = [a for a in sys.argv[1:] if a != "--check-parity"]
-    parity = "--check-parity" in sys.argv[1:]
+    argv = sys.argv[1:]
+    trace_out = None
+    if "--trace-out" in argv:
+        i = argv.index("--trace-out")
+        if i + 1 >= len(argv):
+            raise SystemExit("--trace-out requires a PATH argument")
+        trace_out = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+    args = [a for a in argv if a != "--check-parity"]
+    parity = "--check-parity" in argv
     only = args[0] if args else None
     print("name,us_per_call,derived")
     if parity:
         run_parity_check()
-        if only is None:
+        if only is None and trace_out is None:
             # bare --check-parity = the cheap flat-topology differential
             # smoke (PR fast lane): parity rows only, no benches
+            return
+    if trace_out is not None:
+        for row in multitenant_bench.export_mix_trace(trace_out):
+            print(row)
+        if only is None:
             return
     for fn in fns:
         if only and only not in fn.__name__:

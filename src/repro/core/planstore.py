@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import math
 from typing import Hashable
 
 from repro.core.concurrency import (ConcurrencyController, ConcurrencyPlan,
@@ -224,11 +225,18 @@ class CorrectionTable:
         return c
 
     def stats(self) -> dict[str, float]:
+        mags = [abs(math.log(max(c, 1e-12))) for c in self.point.values()]
         return {
             "observed": self.observed,
             "revoked": self.revoked,
             "points": len(self.point),
             "keys": len(self.overall),
+            # how far the blended corrections sit from the frozen curves,
+            # in |log| space (0.0 = profiles were exact) — the metrics
+            # registry surfaces these as feedback.* gauges
+            "mean_abs_log_correction": (sum(mags) / len(mags)
+                                        if mags else 0.0),
+            "max_abs_log_correction": max(mags, default=0.0),
         }
 
 

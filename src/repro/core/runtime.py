@@ -33,6 +33,7 @@ from repro.core.planstore import (OBS_FINISH, OpObservation, PlanStore,
 from repro.core.scheduler import CorunScheduler, ScheduleResult, uniform_schedule
 from repro.core.simmachine import Placement, SimMachine
 from repro.core.strategy import StrategyConfig
+from repro.obs.trace import NullSink, TraceSink
 
 
 @dataclasses.dataclass
@@ -49,6 +50,9 @@ class RuntimeConfig:
     fallback_slack: float = 1.25    # fallback horizon slack
     topology: str = "flat"          # "flat" | "quadrant" placement
     feedback: str = "off"           # closed-loop plan store ("off" | "ewma")
+    # decision-trace sink (repro.obs): NullSink = tracing off, bit-for-bit
+    # the untraced scheduler
+    sink: TraceSink = dataclasses.field(default_factory=NullSink)
 
     def strategy_config(self) -> StrategyConfig:
         """The shared-core view of these knobs (see repro.core.strategy).
@@ -60,7 +64,8 @@ class RuntimeConfig:
             max_ht_corunners=self.max_ht_corunners,
             min_fallback_cores=self.min_fallback_cores,
             fallback_slack=self.fallback_slack,
-            topology=self.topology, feedback=self.feedback)
+            topology=self.topology, feedback=self.feedback,
+            sink=self.sink)
 
 
 @dataclasses.dataclass
@@ -164,6 +169,7 @@ class ConcurrencyRuntime:
             fallback_slack=cfg.fallback_slack,
             topology=cfg.topology,
             feedback=cfg.feedback,
+            sink=cfg.sink,
             planstore=self.planstore)
 
     def execute_step(self, graph: OpGraph) -> ScheduleResult:

@@ -41,12 +41,14 @@ from typing import Mapping, Sequence
 from repro.core.concurrency import ConcurrencyPlan, ConcurrencyController, OpPlan
 from repro.core.graph import Op, OpGraph
 from repro.core.interference import InterferenceRecorder
+from repro.core.perfmodel import cross_graph_key
 from repro.core.planstore import (OBS_FINISH, FrozenPlanStore, OpObservation,
                                   PlanStore, make_plan_store)
 from repro.core.simmachine import Placement, SimMachine
 from repro.core.strategy import (ScheduledOp, ScheduleResult, StrategyAdapter,
                                  StrategyConfig, StrategyCore, free_cores,
                                  pick_admissible, remaining_horizon)
+from repro.obs.trace import (FAM_PLANSTORE, NULL_SINK, TraceEvent, TraceSink)
 
 __all__ = [
     "CorunScheduler", "ScheduledOp", "ScheduleResult", "free_cores",
@@ -106,13 +108,15 @@ class _GraphAdapter(StrategyAdapter):
 
     def __init__(self, sim: _EventSim, controller: ConcurrencyController,
                  plan: ConcurrencyPlan, *, strategy2: bool,
-                 spec=None, store: PlanStore | None = None):
+                 spec=None, store: PlanStore | None = None,
+                 sink: TraceSink = NULL_SINK):
         self.sim = sim
         self.controller = controller
         self.plan = plan
         self.strategy2 = strategy2
         self.store = store if store is not None \
             else FrozenPlanStore(controller)
+        self.sink = sink
         self._spec = spec
         self._last_quadrant: int | None = None
 
@@ -152,6 +156,19 @@ class _GraphAdapter(StrategyAdapter):
             op=sched.op, threads=sched.threads, variant=sched.variant,
             hyper=sched.hyper, predicted=sched.predicted,
             observed=elapsed, kind=kind))
+        if self.sink.enabled:
+            corrections = getattr(self.store, "corrections", None)
+            self.sink.emit(TraceEvent(
+                ts=self.sim.clock, family=FAM_PLANSTORE, kind=kind, key=key,
+                data={"op_class": sched.op.op_class,
+                      "size_key": sched.op.size_key,
+                      "threads": sched.threads, "variant": sched.variant,
+                      "hyper": sched.hyper, "predicted": sched.predicted,
+                      "observed": elapsed,
+                      "correction": (corrections.factor(
+                          cross_graph_key(sched.op), sched.threads,
+                          sched.variant)
+                          if corrections is not None else 1.0)}))
 
     def commit(self, key: int, sched: ScheduledOp) -> None:
         self.sim.ready.remove(key)
@@ -182,7 +199,7 @@ class CorunScheduler:
                  strategy2: bool = True, max_ht_corunners: int = 2,
                  candidates: int = 3, min_fallback_cores: int = 4,
                  fallback_slack: float = 1.25, topology: str = "flat",
-                 feedback: str = "off",
+                 feedback: str = "off", sink: TraceSink = NULL_SINK,
                  planstore: PlanStore | None = None):
         self.machine = machine
         self.controller = controller
@@ -201,7 +218,8 @@ class CorunScheduler:
                            max_ht_corunners=max_ht_corunners,
                            min_fallback_cores=min_fallback_cores,
                            fallback_slack=fallback_slack,
-                           topology=topology, feedback=feedback),
+                           topology=topology, feedback=feedback,
+                           sink=sink),
             recorder=recorder, total_cores=total_cores)
 
     @property
@@ -216,7 +234,8 @@ class CorunScheduler:
         return _GraphAdapter(sim, self.controller, self.plan,
                              strategy2=self.strategy2,
                              spec=self.machine.spec,
-                             store=self.planstore)
+                             store=self.planstore,
+                             sink=self.core.sink)
 
     # ------------------------------------------------------------------
     def run(self, graph: OpGraph) -> ScheduleResult:

@@ -58,6 +58,8 @@ from repro.core.placement import (REL_ANY, REL_CROSS, REL_LOCAL,
                                   place, placement_relation, quadrants_of)
 from repro.core.planstore import OBS_LAUNCH, OBS_REVOKE
 from repro.core.simmachine import Placement, SimMachine
+from repro.obs.trace import (FAM_PLACEMENT, FAM_PREEMPTION, FAM_STRATEGY,
+                             NullSink, TraceEvent, TraceSink)
 
 NodeKey = Hashable            # int (uid) or (jid, uid) — opaque to the core
 
@@ -174,6 +176,11 @@ class StrategyConfig:
     # admission horizons, Job.demand, and deadline slack all track
     # observed reality when profiles mispredict.
     feedback: str = "off"
+    # decision-trace sink (repro.obs.trace).  The default NullSink keeps
+    # every emit site dormant — the traced and untraced schedulers are
+    # bit-for-bit identical (locked by the traced parity leg); all
+    # NullSink instances compare equal so config equality is unaffected.
+    sink: TraceSink = dataclasses.field(default_factory=NullSink)
 
 
 class StrategyAdapter(abc.ABC):
@@ -297,7 +304,17 @@ class StrategyCore:
                          else InterferenceRecorder())
         self.cores = total_cores or machine.spec.cores
         self.bw_share = bw_share or machine.corun_bw_share
+        self.sink = self.config.sink
         self._blacklist: frozenset[tuple[str, str]] | None = None
+
+    def _emit(self, family: str, kind: str, key: NodeKey,
+              clock: float, **data) -> None:
+        """Build and emit one decision event.  Callers guard on
+        ``self.sink.enabled`` FIRST so the default NullSink path never
+        constructs event payloads (tracing must cost one attribute read
+        when off)."""
+        self.sink.emit(TraceEvent(ts=clock, family=family, kind=kind,
+                                  key=key, data=data))
 
     # ------------------------------------------------------------------
     def begin_run(self) -> None:
@@ -374,30 +391,48 @@ class StrategyCore:
     def free(self, adapter: StrategyAdapter) -> int:
         return free_cores(adapter.running.values(), self.cores)
 
-    def _duration(self, op: Op, plan: OpPlan, hyper: bool,
-                  adapter: StrategyAdapter,
-                  cores: tuple[int, ...] = ()) -> float:
-        pl = Placement(plan.threads, cache_sharing=plan.variant,
-                       hyper_thread=hyper)
+    def _share(self, plan: OpPlan, adapter: StrategyAdapter,
+               cores: tuple[int, ...] = ()) -> float:
+        """Modeled bandwidth share of the launch against what's running."""
         if cores:
             # topology-aware contention: share computed from the actual
             # quadrant co-residents, not the flat global pool
-            share = self.machine.quadrant_bw_share(
+            return self.machine.quadrant_bw_share(
                 cores, [(r.threads, r.cores)
                         for r in adapter.running.values()])
-        else:
-            share = self.bw_share(
-                plan.threads, (r.threads for r in adapter.running.values()))
+        return self.bw_share(
+            plan.threads, (r.threads for r in adapter.running.values()))
+
+    def _duration(self, op: Op, plan: OpPlan, hyper: bool,
+                  share: float) -> float:
+        pl = Placement(plan.threads, cache_sharing=plan.variant,
+                       hyper_thread=hyper)
         return self.machine.op_time(op, pl, bw_share=share)
 
     def launch(self, adapter: StrategyAdapter, key: NodeKey, plan: OpPlan,
-               hyper: bool, cores: tuple[int, ...] = ()) -> ScheduledOp:
+               hyper: bool, cores: tuple[int, ...] = (), *,
+               path: str = "s3_admit") -> ScheduledOp:
         op = adapter.op(key)
-        dur = self._duration(op, plan, hyper, adapter, cores)
+        share = self._share(plan, adapter, cores)
+        dur = self._duration(op, plan, hyper, share)
         sched = ScheduledOp(op=op, threads=plan.threads, variant=plan.variant,
                             hyper=hyper, start=adapter.clock,
                             finish=adapter.clock + dur,
                             predicted=plan.predicted_time, cores=cores)
+        if self.sink.enabled:
+            self._emit(FAM_STRATEGY, path, key, adapter.clock,
+                       op_class=op.op_class, threads=plan.threads,
+                       variant=plan.variant, hyper=hyper,
+                       predicted=plan.predicted_time, bw_share=share,
+                       finish=sched.finish, cores=cores,
+                       co_running=len(adapter.running))
+            if self.config.topology == "quadrant" and cores:
+                quads = quadrants_of(self.machine.spec, cores)
+                self._emit(FAM_PLACEMENT,
+                           "spill" if len(quads) > 1 else "book",
+                           key, adapter.clock, quadrants=sorted(quads),
+                           spill=len(quads) > 1, width=len(cores),
+                           prefer=adapter.placement_hint(key))
         # interference bookkeeping: observed co-run duration vs solo model,
         # keyed by class pair (the machine doesn't care who launched what)
         # plus, under quadrant topology, the pair's placement relation —
@@ -431,20 +466,56 @@ class StrategyCore:
                 key=lambda k: -adapter.instance_plan(k).predicted_time)
             for key in order:
                 op = adapter.op(key)
+                traced = self.sink.enabled
                 if not self._compatible(op.op_class, running_classes):
+                    if traced:
+                        self._emit(FAM_STRATEGY, "reject", key,
+                                   adapter.clock, cause="blacklist",
+                                   op_class=op.op_class)
                     continue
                 avoid = self._placement_avoid(op.op_class, adapter)
                 if avoid is None:
+                    if traced:
+                        self._emit(FAM_STRATEGY, "reject", key,
+                                   adapter.clock, cause="no_feasible_quadrant",
+                                   op_class=op.op_class)
                     continue
                 cands = adapter.candidates_for(key, self.config.candidates)
                 pick = pick_admissible(cands, free, horizon)
                 if pick is None:
+                    if traced:
+                        self._emit(FAM_STRATEGY, "reject", key,
+                                   adapter.clock, cause="no_admissible",
+                                   op_class=op.op_class, free=free,
+                                   horizon=horizon,
+                                   candidates=[(c.threads, c.predicted_time)
+                                               for c in cands])
                     continue
+                proposal = pick
                 pick = adapter.clamp(key, pick)
+                if traced and (pick.threads != proposal.threads
+                               or pick.variant != proposal.variant):
+                    self._emit(FAM_STRATEGY, "s2_clamp", key, adapter.clock,
+                               op_class=op.op_class,
+                               from_threads=proposal.threads,
+                               to_threads=pick.threads,
+                               from_variant=proposal.variant,
+                               to_variant=pick.variant)
                 if pick.threads > free:
+                    if traced:
+                        self._emit(FAM_STRATEGY, "reject", key,
+                                   adapter.clock, cause="clamp_overflow",
+                                   op_class=op.op_class,
+                                   threads=pick.threads, free=free)
                     continue
                 cores = self._place(adapter, key, pick, avoid)
                 if cores is None:
+                    if traced:
+                        self._emit(FAM_STRATEGY, "reject", key,
+                                   adapter.clock, cause="no_placement",
+                                   op_class=op.op_class,
+                                   threads=pick.threads,
+                                   avoid=sorted(avoid))
                     continue
                 self.launch(adapter, key, pick, hyper=False, cores=cores)
                 return True
@@ -487,15 +558,33 @@ class StrategyCore:
             if plan.threads > free:
                 plan = OpPlan(free, plan.variant,
                               adapter.predict(key, free, plan.variant))
+            traced = self.sink.enabled
             if plan.predicted_time > horizon * self.config.fallback_slack:
+                if traced:
+                    self._emit(FAM_STRATEGY, "reject", key, adapter.clock,
+                               cause="fallback_outlasts_horizon",
+                               op_class=adapter.op(key).op_class,
+                               predicted=plan.predicted_time,
+                               horizon=horizon,
+                               slack=self.config.fallback_slack)
                 continue
             avoid = self._placement_avoid(adapter.op(key).op_class, adapter)
             if avoid is None:
+                if traced:
+                    self._emit(FAM_STRATEGY, "reject", key, adapter.clock,
+                               cause="no_feasible_quadrant",
+                               op_class=adapter.op(key).op_class)
                 continue
             cores = self._place(adapter, key, plan, avoid)
             if cores is None:
+                if traced:
+                    self._emit(FAM_STRATEGY, "reject", key, adapter.clock,
+                               cause="no_placement",
+                               op_class=adapter.op(key).op_class,
+                               threads=plan.threads, avoid=sorted(avoid))
                 continue
-            self.launch(adapter, key, plan, hyper=False, cores=cores)
+            self.launch(adapter, key, plan, hyper=False, cores=cores,
+                        path="fallback")
             return True
         return False
 
@@ -527,7 +616,7 @@ class StrategyCore:
             inst = adapter.instance_plan(key)
             plan = OpPlan(min(inst.threads, self.cores), inst.variant,
                           inst.predicted_time)
-            self.launch(adapter, key, plan, hyper=True)
+            self.launch(adapter, key, plan, hyper=True, path="s4_hyper")
             return True
         return False
 
@@ -595,12 +684,14 @@ class StrategyCore:
         # otherwise idle cores suffice when the preferred width fits OR a
         # squeezed launch loses at most ~2x width (bounded time penalty
         # beats the waste of revoking someone's partial work)
+        traced = self.sink.enabled
+        waiter_slack = adapter.deadline_slack(key)
         victim_key = None
         if must_preempt or (free < need
                             and free < max(floor, (need + 1) // 2)):
             # pick the victim BEFORE revoking so a failed fit leaves the
             # running set untouched
-            slack = adapter.deadline_slack(key)
+            slack = waiter_slack
             victims = []
             for vk, r in running.items():
                 if r.hyper or r.start >= adapter.clock:
@@ -618,17 +709,41 @@ class StrategyCore:
                         and free + running[victim_key].threads < floor):
                     victim_key = None      # revoking gains too little
             if victim_key is None and (must_preempt or free < floor):
+                if traced:
+                    self._emit(FAM_PREEMPTION, "no_victim", key,
+                               adapter.clock, op_class=op.op_class,
+                               waiter_slack=waiter_slack, free=free,
+                               need=need, n_candidates=len(victims))
                 return False               # nothing useful to claim now
         rest = [r.op.op_class for vk, r in running.items()
                 if vk != victim_key]
         if not self._compatible(op.op_class, rest):
+            if traced:
+                self._emit(FAM_PREEMPTION, "incompatible", key,
+                           adapter.clock, op_class=op.op_class,
+                           waiter_slack=waiter_slack)
             return False
         if victim_key is not None:
             revoked = adapter.revoke(victim_key)
             elapsed = adapter.clock - revoked.start
+            if traced:
+                self._emit(FAM_PREEMPTION, "revoke", key, adapter.clock,
+                           op_class=op.op_class, waiter_slack=waiter_slack,
+                           waiter_pred=pred, victim=victim_key,
+                           victim_class=revoked.op.op_class,
+                           victim_threads=revoked.threads,
+                           victim_remaining=revoked.finish - adapter.clock,
+                           victim_elapsed=elapsed,
+                           n_candidates=len(victims))
             adapter.refund(victim_key, revoked, elapsed)
             adapter.observe(victim_key, revoked, OBS_REVOKE, elapsed)
             free = self.free(adapter)
+        elif traced:
+            # the throughput guard is waived: the overdue op launches into
+            # idle cores even though it may outlast the running set
+            self._emit(FAM_PREEMPTION, "waive", key, adapter.clock,
+                       op_class=op.op_class, waiter_slack=waiter_slack,
+                       free=free, need=need)
         # fewest-thread admissible candidate, horizon deliberately waived;
         # clamp to the claimed cores when the preferred width is unreachable
         pick = pick_admissible(cands, free, float("inf"))
@@ -636,6 +751,10 @@ class StrategyCore:
             pick = min(cands, key=lambda c: c.threads)
         pick = adapter.clamp(key, pick)
         if pick.threads > free:
+            if traced:
+                self._emit(FAM_PREEMPTION, "squeeze", key, adapter.clock,
+                           op_class=op.op_class, from_threads=pick.threads,
+                           to_threads=free, waiter_slack=waiter_slack)
             pick = OpPlan(free, pick.variant,
                           adapter.predict(key, free, pick.variant))
         # quadrant placement for the claimed launch: the cross-relation
@@ -645,8 +764,13 @@ class StrategyCore:
         avoid = self._placement_avoid(op.op_class, adapter) or frozenset()
         cores = self._place(adapter, key, pick, avoid)
         if cores is None:
+            if traced and avoid:
+                self._emit(FAM_PLACEMENT, "avoid_override", key,
+                           adapter.clock, op_class=op.op_class,
+                           avoid=sorted(avoid), width=pick.threads)
             cores = self._place(adapter, key, pick, frozenset())
-        self.launch(adapter, key, pick, hyper=False, cores=cores)
+        self.launch(adapter, key, pick, hyper=False, cores=cores,
+                    path="deadline_claim")
         return True
 
     # ---- the launch fixpoint loop --------------------------------------

@@ -16,6 +16,11 @@ admission demand, deadline slack; see ``repro.core.planstore``), and
 ``--plan-cache-path`` persists the cross-job curve cache across launcher
 invocations (loaded before the run if the file exists, dumped after), so
 profiling probes paid today are still amortized tomorrow.
+
+Observability knobs: ``--trace-out trace.json`` records every scheduling
+decision (see ``repro.obs.trace``) and writes the run as a Chrome-trace/
+Perfetto JSON timeline — open it at https://ui.perfetto.dev;
+``--log-level`` configures the shared ``repro`` logger.
 """
 
 from __future__ import annotations
@@ -27,6 +32,10 @@ import pathlib
 from repro.core import SimMachine, build_paper_graph
 from repro.multitenant import (PlanCache, PoolConfig, PreemptionPolicy,
                                RuntimePool)
+from repro.obs import (RecordingSink, configure_logging, export_pool_trace,
+                       get_logger)
+
+logger = get_logger(__name__)
 
 
 def main() -> None:
@@ -77,7 +86,17 @@ def main() -> None:
                     help="preflight: verify a single-job pool reproduces "
                          "the single-graph scheduler bit-for-bit on this "
                          "tenant mix's models (fails fast on divergence)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record every scheduling decision and write the "
+                         "run as Chrome-trace/Perfetto JSON (open at "
+                         "https://ui.perfetto.dev); tracing never changes "
+                         "the schedule — the traced timeline is "
+                         "bit-for-bit the untraced one")
+    ap.add_argument("--log-level", default="warning",
+                    choices=("debug", "info", "warning", "error"),
+                    help="level for the shared 'repro' logger")
     args = ap.parse_args()
+    configure_logging(args.log_level)
 
     models = [m.strip() for m in args.jobs.split(",") if m.strip()]
     if not models:
@@ -100,7 +119,7 @@ def main() -> None:
         if not report["ok"]:
             for model, rec in report["models"].items():
                 for d in rec["divergences"][:10]:
-                    print(f"parity divergence [{model}]: {d}")
+                    logger.error("parity divergence [%s]: %s", model, d)
             raise SystemExit("pool-vs-corun parity check FAILED")
         parity = {m: rec["ok"] for m, rec in report["models"].items()}
 
@@ -109,6 +128,7 @@ def main() -> None:
     plan_cache = (PlanCache.load(cache_path)
                   if cache_path is not None and cache_path.exists()
                   else PlanCache())
+    sink = RecordingSink() if args.trace_out else None
     pool = RuntimePool(
         machine=SimMachine(seed=args.seed),
         plan_cache=plan_cache,
@@ -117,6 +137,7 @@ def main() -> None:
             reservation_window=args.reservation_window,
             topology=(args.topology if args.topology != "flat" else None),
             feedback=(args.feedback if args.feedback != "off" else None),
+            sink=sink,
             preemption=(PreemptionPolicy(enabled=True)
                         if args.preempt else None)))
     for i, (model, prio, budget) in enumerate(zip(models, prios, budgets)):
@@ -130,6 +151,11 @@ def main() -> None:
     serial = pool.run_serial()
     if cache_path is not None:
         plan_cache.dump(cache_path)
+    if sink is not None:
+        trace = export_pool_trace(res, args.trace_out, sink.events)
+        logger.info("wrote %d trace events (%d decision events) to %s",
+                    len(trace["traceEvents"]), len(sink.events),
+                    args.trace_out)
 
     print(json.dumps({
         "jobs": [{
@@ -175,6 +201,10 @@ def main() -> None:
            if cache_path is not None else {}),
         "serial_profiling_probes": serial.profiling_probes,
         **({"parity_check": parity} if parity is not None else {}),
+        **({"trace_out": args.trace_out,
+            "trace_decision_events": len(sink.events)}
+           if sink is not None else {}),
+        "metrics": res.metrics,
     }, indent=1))
 
 

@@ -236,26 +236,39 @@ class JobQueue:
         return None
 
     def _admissible_index(self, active: list[Job],
-                          now: float) -> int | None:
-        """Index into the waiting list of the job ``pop_admissible`` would
-        hand out, or None.  One predicate for both popping and the pool's
-        arrival-wakeup check, so a wakeup can never disagree with the
-        admission it is waking up for."""
+                          now: float) -> tuple[int | None, str]:
+        """``(index, cause)``: the waiting-list index of the job
+        ``pop_admissible`` would hand out (cause ``"ok"``), or ``None``
+        with WHY nothing is admissible — ``"empty"`` / ``"not_arrived"``
+        (nothing to decide yet), ``"max_active"`` / ``"demand_cap"`` /
+        ``"reserved"`` (an arrived tenant was actually blocked; these are
+        the causes the admission trace reports).  One predicate for both
+        popping and the pool's arrival-wakeup check, so a wakeup can
+        never disagree with the admission it is waking up for."""
+        if not self._waiting:
+            return None, "empty"
         if len(active) >= self.max_active:
-            return None
+            return None, "max_active"
         for i, (*_, job) in enumerate(self._waiting):
             if job.submit_time > now:
                 continue
             if self.max_outstanding_demand is not None and active:
                 outstanding = sum(j.demand for j in active)
                 if outstanding + job.demand > self.max_outstanding_demand:
-                    return None
+                    return None, "demand_cap"
             if (self.reservation_window > 0.0
                     and len(active) == self.max_active - 1
                     and self._imminent_urgent_arrival(job, now)):
-                return None
-            return i
-        return None
+                return None, "reserved"
+            return i, "ok"
+        return None, "not_arrived"
+
+    def block_cause(self, active: list[Job], now: float) -> str | None:
+        """Why no waiting job is admissible right now (see
+        ``_admissible_index`` for the vocabulary), or ``None`` when one
+        IS admissible — the pool's admission decision trace reads this."""
+        i, cause = self._admissible_index(active, now)
+        return None if i is not None else cause
 
     def _imminent_urgent_arrival(self, job: Job, now: float) -> bool:
         """Is a strictly-higher-priority deadlined job due within the
@@ -275,7 +288,7 @@ class JobQueue:
         priority job overtake one that is merely too big — the big job
         waits, everything behind it waits too (strict priority, no
         starvation by overtaking)."""
-        i = self._admissible_index(active, now)
+        i, _ = self._admissible_index(active, now)
         if i is None:
             return None
         return self._waiting.pop(i)[4]
@@ -285,7 +298,7 @@ class JobQueue:
         pool's arrival-wakeup predicate: waking the scheduling loop for an
         arrival that the demand cap (or a reservation) would bounce is a
         spurious scheduling instant."""
-        return self._admissible_index(active, t) is not None
+        return self._admissible_index(active, t)[0] is not None
 
 
 def jain(values: list[float]) -> float:

@@ -43,6 +43,7 @@ from repro.core.runtime import ConcurrencyRuntime, RuntimeConfig
 from repro.core.simmachine import SimMachine
 from repro.core.strategy import ScheduleResult
 from repro.multitenant.pool import PoolConfig, RuntimePool
+from repro.obs.trace import RecordingSink
 
 # the fields of one timeline row, in report order
 _ROW_FIELDS = ("uid", "op_class", "threads", "variant", "hyper",
@@ -127,13 +128,16 @@ def check_parity(models: Iterable[str] = ("resnet50", "dcgan"), *,
                  seed: int = 0, scale: int = 1,
                  config: RuntimeConfig | None = None) -> dict:
     """Pool-vs-corun parity over paper-zoo models, plus the closed-loop
-    zero-error leg.
+    zero-error leg and the trace-inertness leg.
 
-    Per model, FOUR timelines must agree bitwise with the single-graph
+    Per model, FIVE timelines must agree bitwise with the single-graph
     ``feedback="off"`` reference: the single-job pool (the strategy-core
-    differential), and both schedulers re-run with ``feedback="ewma"`` on
-    a zero-error observation stream (the blend-math lock — an exact
-    observation may not move any prediction).
+    differential), a single-job pool with a live ``RecordingSink`` (the
+    observability lock — tracing must be bit-for-bit inert, and a traced
+    run that records ZERO events is itself flagged, so the leg can't
+    pass vacuously with a disconnected sink), and both schedulers re-run
+    with ``feedback="ewma"`` on a zero-error observation stream (the
+    blend-math lock — an exact observation may not move any prediction).
 
     Returns ``{"ok": bool, "models": {name: {"ok", "makespan",
     "divergences"}}}``.  Uses equal-seeded machines (the sim machine is a
@@ -148,14 +152,22 @@ def check_parity(models: Iterable[str] = ("resnet50", "dcgan"), *,
         graph = build_paper_graph(model, scale=scale)
         single = corun_timeline(graph, SimMachine(seed=seed), config)
         ref = timeline_rows(single)
+        sink = RecordingSink()
         legs = {
             "pool": pool_timeline(graph, SimMachine(seed=seed), config),
+            "pool-traced": pool_timeline(
+                graph, SimMachine(seed=seed),
+                pool_config=PoolConfig(max_active=1, runtime=base,
+                                       sink=sink)),
             "corun-ewma0": corun_timeline(graph, SimMachine(seed=seed),
                                           fb, zero_error=True),
             "pool-ewma0": pool_timeline(graph, SimMachine(seed=seed), fb,
                                         zero_error=True),
         }
         divs: list[str] = []
+        if not sink.events:
+            divs.append("pool-traced: RecordingSink recorded 0 events — "
+                        "the trace seam is disconnected")
         for label, res in legs.items():
             d = compare_timelines(ref, timeline_rows(res), label_b=label)
             if single.makespan != res.makespan:

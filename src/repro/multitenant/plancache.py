@@ -32,10 +32,12 @@ from __future__ import annotations
 import dataclasses
 import json
 import pathlib
-import warnings
 from typing import Hashable
 
 from repro.core.perfmodel import CurveModel
+from repro.obs.log import get_logger
+
+logger = get_logger(__name__)
 
 # bump whenever the on-disk layout changes; load() refuses other versions
 SCHEMA_VERSION = 1
@@ -210,10 +212,9 @@ class PlanCache:
                     entry["curve"])
             return cache
         except Exception as e:  # noqa: BLE001 - degrade, never crash
-            warnings.warn(
-                f"PlanCache.load({path!s}): {e!r} — falling back to an "
-                "empty cache (curves will be re-measured)",
-                stacklevel=2)
+            logger.warning(
+                "PlanCache.load(%s): %r — falling back to an "
+                "empty cache (curves will be re-measured)", path, e)
             return cls()
 
     # ---- accounting ---------------------------------------------------

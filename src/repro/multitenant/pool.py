@@ -61,8 +61,12 @@ from typing import Mapping, Sequence
 from repro.core.concurrency import OpPlan
 from repro.core.graph import Op, OpGraph
 from repro.core.interference import InterferenceRecorder
+from repro.core.perfmodel import cross_graph_key
 from repro.core.planstore import (OBS_FINISH, OBS_REVOKE, CorrectionTable,
                                   OpObservation, make_plan_store)
+from repro.obs.metrics import pool_metrics
+from repro.obs.trace import (FAM_ADMISSION, FAM_PLANSTORE, FAM_STRATEGY,
+                             NULL_SINK, TraceEvent, TraceSink)
 from repro.core.runtime import ConcurrencyRuntime, RuntimeConfig
 from repro.core.simmachine import SimMachine
 from repro.core.strategy import (PreemptionPolicy, ScheduledOp,
@@ -102,6 +106,9 @@ class PoolConfig:
     # defaults to the RuntimeConfig setting like the knobs above, so
     # feedback-free pools stay bit-identical to the PR-4 schedulers
     feedback: str | None = None
+    # decision-trace sink (repro.obs); None = inherit the RuntimeConfig
+    # sink (whose default NullSink keeps tracing bit-for-bit inert)
+    sink: TraceSink | None = None
     runtime: RuntimeConfig = dataclasses.field(default_factory=RuntimeConfig)
 
     def strategy_config(self) -> StrategyConfig:
@@ -115,6 +122,7 @@ class PoolConfig:
             ("fallback_slack", self.fallback_slack),
             ("topology", self.topology),
             ("feedback", self.feedback),
+            ("sink", self.sink),
             ("preemption", self.preemption)) if v is not None}
         return dataclasses.replace(cfg, **overrides) if overrides else cfg
 
@@ -238,6 +246,10 @@ class PoolResult:
     # CorrectionTable.stats() of the pool's shared EWMA state (None when
     # the pool ran with feedback="off")
     feedback_stats: dict[str, float] | None = None
+    # flat metric snapshot of the run (repro.obs.metrics.pool_metrics):
+    # the one accounting surface benches/CLI consume instead of each
+    # re-deriving its own sums from records
+    metrics: dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def total_ops(self) -> int:
@@ -322,10 +334,11 @@ class _PoolAdapter(StrategyAdapter):
     cores)."""
 
     def __init__(self, sim: _PoolSim, machine: SimMachine, *,
-                 strategy2: bool):
+                 strategy2: bool, sink: TraceSink = NULL_SINK):
         self.sim = sim
         self.machine = machine
         self.strategy2 = strategy2
+        self.sink = sink
 
     @property
     def clock(self) -> float:
@@ -385,7 +398,14 @@ class _PoolAdapter(StrategyAdapter):
         eff = (self.machine.spec.hyper_thread_efficiency
                if sched.hyper else 1.0)
         job = self._job(key)
-        job.service += sched.threads * sched.duration * eff
+        amount = sched.threads * sched.duration * eff
+        job.service += amount
+        if self.sink.enabled:
+            self.sink.emit(TraceEvent(
+                ts=self.sim.clock, family=FAM_STRATEGY, kind="charge",
+                key=key, data={"jid": job.jid, "job": job.name,
+                               "priority": job.priority, "amount": amount,
+                               "service": job.service}))
         if sched.cores:
             # tenant-to-quadrant affinity: remember where the job landed
             # (the primary quadrant — placement fills it first) so its
@@ -412,6 +432,20 @@ class _PoolAdapter(StrategyAdapter):
             op=sched.op, threads=sched.threads, variant=sched.variant,
             hyper=sched.hyper, predicted=sched.predicted,
             observed=elapsed, kind=kind))
+        if self.sink.enabled:
+            corrections = getattr(job.store, "corrections", None)
+            self.sink.emit(TraceEvent(
+                ts=self.sim.clock, family=FAM_PLANSTORE, kind=kind,
+                key=key,
+                data={"op_class": sched.op.op_class,
+                      "size_key": sched.op.size_key,
+                      "threads": sched.threads, "variant": sched.variant,
+                      "hyper": sched.hyper, "predicted": sched.predicted,
+                      "observed": elapsed,
+                      "correction": (corrections.factor(
+                          cross_graph_key(sched.op), sched.threads,
+                          sched.variant)
+                          if corrections is not None else 1.0)}))
         if job.store.adaptive and kind in (OBS_FINISH, OBS_REVOKE):
             assert job.plan is not None
             done = self.sim.completed[key[0]]
@@ -441,9 +475,17 @@ class _PoolAdapter(StrategyAdapter):
         eff = (self.machine.spec.hyper_thread_efficiency
                if sched.hyper else 1.0)
         job = self._job(key)
-        job.service -= sched.threads * sched.duration * eff
-        job.service += (sched.threads * elapsed * eff
-                        * self.machine.spec.restart_waste)
+        refund = sched.threads * sched.duration * eff
+        waste = (sched.threads * elapsed * eff
+                 * self.machine.spec.restart_waste)
+        job.service -= refund
+        job.service += waste
+        if self.sink.enabled:
+            self.sink.emit(TraceEvent(
+                ts=self.sim.clock, family=FAM_STRATEGY, kind="refund",
+                key=key, data={"jid": job.jid, "job": job.name,
+                               "priority": job.priority, "refund": refund,
+                               "waste": waste, "elapsed": elapsed}))
 
 
 class PoolScheduler:
@@ -462,7 +504,8 @@ class PoolScheduler:
 
     def adapter(self, sim: _PoolSim) -> _PoolAdapter:
         return _PoolAdapter(sim, self.machine,
-                            strategy2=self.config.runtime.strategy2)
+                            strategy2=self.config.runtime.strategy2,
+                            sink=self.core.sink)
 
     # Strategy entry points kept as the public seam (delegating to the
     # shared core); ``active`` is accepted for compatibility but the ready
@@ -521,7 +564,9 @@ class RuntimePool:
         # ONE correction table spans every tenant (keyed by the same
         # cross_graph_key the PlanCache shares curves under): an op class
         # one tenant's observations re-estimated is re-estimated for all
-        self.feedback = self.config.strategy_config().feedback
+        strat = self.config.strategy_config()
+        self.feedback = strat.feedback
+        self.sink = strat.sink
         self.corrections = (CorrectionTable()
                             if self.feedback != "off" else None)
         self._refreshed_at = 0      # corrections.observed at last refresh
@@ -561,7 +606,19 @@ class RuntimePool:
         job = Job(jid=next(self._jid), name=name or graph.name, graph=graph,
                   priority=priority, submit_time=submit_time,
                   deadline=deadline)
+        traced = self.sink.enabled
+        before = self.plan_cache.stats() if traced else None
         self._profile_job(job, self.plan_cache)
+        if traced:
+            after = self.plan_cache.stats()
+            self.sink.emit(TraceEvent(
+                ts=submit_time, family=FAM_PLANSTORE, kind="profile",
+                key=job.jid,
+                data={"job": job.name, "n_ops": len(graph.ops),
+                      "demand": job.demand, "priority": priority,
+                      "probes": after["probes_spent"]
+                      - before["probes_spent"],
+                      "cache_hits": after["hits"] - before["hits"]}))
         self.jobs.append(job)
         self.queue.submit(job)
         return job
@@ -591,12 +648,38 @@ class RuntimePool:
 
     def _admit(self, sim: _PoolSim, active: list[Job]) -> None:
         self._refresh_waiting_estimates()
+        traced = self.sink.enabled
         while True:
             job = self.queue.pop_admissible(active, now=sim.clock)
             if job is None:
+                if traced:
+                    # only arrived-but-blocked tenants are admission
+                    # DECISIONS; an empty queue or not-yet-arrived jobs
+                    # leave nothing to decide
+                    cause = self.queue.block_cause(active, sim.clock)
+                    if cause in ("max_active", "demand_cap", "reserved"):
+                        self.sink.emit(TraceEvent(
+                            ts=sim.clock, family=FAM_ADMISSION,
+                            kind=("reserve" if cause == "reserved"
+                                  else "defer"),
+                            data={"cause": cause,
+                                  "queue_depth": len(self.queue),
+                                  "n_active": len(active),
+                                  "outstanding": sum(j.demand
+                                                     for j in active)}))
                 return
             job.admit_time = sim.clock
             job.admitted_demand = job.demand
+            if traced:
+                self.sink.emit(TraceEvent(
+                    ts=sim.clock, family=FAM_ADMISSION, kind="admit",
+                    key=job.jid,
+                    data={"job": job.name, "priority": job.priority,
+                          "demand": job.demand, "deadline": job.deadline,
+                          "queue_wait": sim.clock - job.submit_time,
+                          "queue_depth": len(self.queue),
+                          "n_active": len(active),
+                          "outstanding": sum(j.demand for j in active)}))
             sim.admit(job)
             if not sim.ready[job.jid]:      # zero-op graph: done on arrival
                 job.finish_time = sim.clock
@@ -685,12 +768,19 @@ class RuntimePool:
                     job.finish_time = sim.clock
                     active.remove(job)
                 self._admit(sim, active)
-        return PoolResult(makespan=sim.clock, jobs=list(self.jobs),
-                          records=sim.records, events=sim.events,
-                          cache_stats=self.plan_cache.stats(),
-                          preempted=sim.preempted,
-                          feedback_stats=(self.corrections.stats()
-                                          if self.corrections else None))
+        result = PoolResult(makespan=sim.clock, jobs=list(self.jobs),
+                            records=sim.records, events=sim.events,
+                            cache_stats=self.plan_cache.stats(),
+                            preempted=sim.preempted,
+                            feedback_stats=(self.corrections.stats()
+                                            if self.corrections else None))
+        # the standard metric snapshot rides on EVERY result (tracing not
+        # required): benches and the CLI read one accounting surface
+        result.metrics = pool_metrics(
+            result, spec=self.machine.spec,
+            cache_stats=result.cache_stats,
+            corrections=self.corrections).snapshot()
+        return result
 
     # ---- baseline -------------------------------------------------------
     def run_serial(self, *, share_cache: bool = False) -> SerialResult:

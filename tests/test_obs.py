@@ -1,0 +1,288 @@
+"""Observability: trace inertness, event families, metrics agreement,
+Perfetto export schema, and the shared logger.
+
+The three locks this file owns:
+
+* tracing is bit-for-bit inert — a pool run with a live ``RecordingSink``
+  produces the identical timeline to the untraced run (the deterministic
+  twin of the hypothesis property in ``test_property.py``, plus the
+  traced leg ``check_parity`` runs on every differential);
+* the decision-event stream is a sufficient audit record —
+  ``metrics_from_events`` over the events alone reproduces the service,
+  restart-waste, op-count, probe, throughput, and fairness numbers that
+  ``pool_metrics`` derives from the ``PoolResult``;
+* the Perfetto export is loadable — every event carries valid Trace
+  Event Format fields and the JSON round-trips through a file.
+"""
+
+import json
+import logging
+
+import pytest
+
+from repro.core import SimMachine, build_paper_graph
+from repro.multitenant import (PoolConfig, PreemptionPolicy, RuntimePool,
+                               check_parity, compare_timelines,
+                               timeline_rows)
+from repro.obs import (FAM_ADMISSION, FAM_PLACEMENT, FAM_PLANSTORE,
+                       FAM_PREEMPTION, FAM_STRATEGY, FAMILIES, NULL_SINK,
+                       MetricsRegistry, NullSink, RecordingSink, TraceEvent,
+                       configure_logging, get_logger, metrics_from_events,
+                       pool_trace, write_trace)
+
+MIX = [("resnet50", 1.0), ("dcgan", 1.0), ("resnet50", 2.0), ("dcgan", 1.0)]
+
+# every decision family fires under this config: quadrant topology
+# (placement), ewma feedback (planstore), staggered arrivals + demand cap
+# under max_active=2 (admission defers), deadlines + preemption (revokes)
+def _run_mix(sink=None):
+    pool = RuntimePool(
+        machine=SimMachine(),
+        config=PoolConfig(max_active=2, topology="quadrant",
+                          feedback="ewma",
+                          max_outstanding_demand=5000.0,
+                          preemption=PreemptionPolicy(enabled=True),
+                          sink=sink))
+    for i, (model, prio) in enumerate(MIX):
+        submit = i * 0.0005
+        pool.submit(build_paper_graph(model), priority=prio,
+                    name=f"{model}-{i}", submit_time=submit,
+                    deadline=(submit + 0.002 if i % 2 else None))
+    return pool, pool.run()
+
+
+@pytest.fixture(scope="module")
+def traced_mix():
+    sink = RecordingSink()
+    pool, res = _run_mix(sink)
+    return pool, res, sink
+
+
+@pytest.fixture(scope="module")
+def untraced_mix():
+    return _run_mix(None)
+
+
+# ---------------------------------------------------------------------------
+# the sink seam
+# ---------------------------------------------------------------------------
+
+class TestSinkSeam:
+    def test_null_sink_is_disabled_and_value_equal(self):
+        assert NullSink().enabled is False
+        assert NullSink() == NullSink() == NULL_SINK
+        assert hash(NullSink()) == hash(NULL_SINK)
+        assert NullSink() != RecordingSink()
+
+    def test_recording_sink_collects_and_slices(self):
+        sink = RecordingSink()
+        assert sink.enabled
+        sink.emit(TraceEvent(ts=0.0, family=FAM_ADMISSION, kind="admit"))
+        sink.emit(TraceEvent(ts=1.0, family=FAM_STRATEGY, kind="s3_admit",
+                             key=(0, 1), data={"threads": 8}))
+        assert len(sink) == 2
+        assert [e.kind for e in sink.by_family(FAM_STRATEGY)] == ["s3_admit"]
+        assert sink.families() == {FAM_ADMISSION, FAM_STRATEGY}
+
+    def test_trace_event_to_json_is_serializable(self):
+        e = TraceEvent(ts=0.5, family=FAM_PLACEMENT, kind="book",
+                       key=(1, 2), data={"quadrants": (0,), "spill": False})
+        d = json.loads(json.dumps(e.to_json()))
+        assert d["family"] == FAM_PLACEMENT and d["kind"] == "book"
+        assert d["data"]["quadrants"] == [0]
+
+
+# ---------------------------------------------------------------------------
+# trace inertness: traced == untraced, bit for bit
+# ---------------------------------------------------------------------------
+
+class TestTraceInertness:
+    def test_traced_mix_timeline_bitwise_untraced(self, traced_mix,
+                                                  untraced_mix):
+        _, traced, sink = traced_mix
+        _, ref = untraced_mix
+        assert sink.events, "the traced run must actually record events"
+        assert traced.makespan == ref.makespan
+        assert traced.n_preemptions == ref.n_preemptions
+        for jid in ref.records:
+            divs = compare_timelines(
+                timeline_rows(ref.per_job_schedule(jid)),
+                timeline_rows(traced.per_job_schedule(jid)),
+                label_a="untraced", label_b="traced")
+            assert not divs, divs[:5]
+
+    def test_check_parity_runs_the_traced_leg(self):
+        report = check_parity(["dcgan"])
+        assert report["ok"], report
+
+    def test_metrics_ride_on_untraced_results_too(self, untraced_mix):
+        _, res = untraced_mix
+        assert res.metrics["pool.makespan_s"] == res.makespan
+        assert res.metrics["pool.preemptions"] == res.n_preemptions
+        assert res.metrics["cache.probes_spent"] == \
+            res.cache_stats["probes_spent"]
+
+
+# ---------------------------------------------------------------------------
+# the event stream
+# ---------------------------------------------------------------------------
+
+class TestEventStream:
+    def test_all_five_families_fire_on_the_armed_mix(self, traced_mix):
+        _, _, sink = traced_mix
+        assert sink.families() == set(FAMILIES)
+
+    def test_events_carry_causes_and_inputs(self, traced_mix):
+        _, _, sink = traced_mix
+        admits = [e for e in sink.by_family(FAM_ADMISSION)
+                  if e.kind == "admit"]
+        assert admits and all(
+            {"demand", "priority", "queue_depth"} <= e.data.keys()
+            for e in admits)
+        revokes = [e for e in sink.by_family(FAM_PREEMPTION)
+                   if e.kind == "revoke"]
+        assert revokes and all(
+            {"victim", "waiter_slack", "victim_remaining"}
+            <= e.data.keys() for e in revokes)
+        books = [e for e in sink.by_family(FAM_PLACEMENT)
+                 if e.kind in ("book", "spill")]
+        assert books and all("quadrants" in e.data for e in books)
+        finishes = [e for e in sink.by_family(FAM_PLANSTORE)
+                    if e.kind == "finish"]
+        assert finishes and all(
+            {"predicted", "observed", "correction"} <= e.data.keys()
+            for e in finishes)
+
+    def test_every_event_is_json_serializable(self, traced_mix):
+        _, _, sink = traced_mix
+        dumped = json.dumps([e.to_json() for e in sink.events])
+        assert len(json.loads(dumped)) == len(sink.events)
+
+
+# ---------------------------------------------------------------------------
+# metrics: events alone reproduce the PoolResult accounting
+# ---------------------------------------------------------------------------
+
+class TestMetricsAgreement:
+    def test_event_metrics_match_pool_accounting(self, traced_mix):
+        _, res, sink = traced_mix
+        ev = metrics_from_events(sink.events)
+        assert ev.value("pool.service_core_s") == \
+            sum(j.service for j in res.jobs)
+        assert ev.value("pool.total_ops") == res.total_ops
+        assert ev.value("pool.makespan_s") == res.makespan
+        assert ev.value("pool.fairness_jain") == res.fairness
+        assert ev.value("preemption.revoke") == res.n_preemptions > 0
+        assert ev.value("cache.probes_spent") == \
+            res.cache_stats["probes_spent"]
+
+    def test_event_restart_waste_matches_result_metrics(self, traced_mix):
+        _, res, _ = traced_mix
+        sink = traced_mix[2]
+        ev = metrics_from_events(sink.events)
+        assert res.metrics["pool.restart_waste_core_s"] > 0.0
+        assert ev.value("pool.restart_waste_core_s") == \
+            res.metrics["pool.restart_waste_core_s"]
+
+    def test_event_throughput_and_locality_match(self, traced_mix):
+        _, res, sink = traced_mix
+        ev = metrics_from_events(sink.events)
+        assert ev.value("pool.throughput_ops_s") == pytest.approx(
+            res.aggregate_throughput, rel=1e-12)
+        assert ev.value("placement.local_fraction") == \
+            res.metrics["placement.local_fraction"]
+
+    def test_registry_primitives(self):
+        reg = MetricsRegistry()
+        reg.counter("c").inc()
+        reg.counter("c").inc(2.0)
+        reg.gauge("g").set(0.5)
+        for v in (1.0, 2.0, 3.0, 4.0):
+            reg.histogram("h").observe(v)
+        snap = reg.snapshot()
+        assert snap["c"] == 3.0 and snap["g"] == 0.5
+        assert snap["h.count"] == 4 and snap["h.mean"] == 2.5
+        assert snap["h.p50"] == 2.0 and snap["h.max"] == 4.0
+        assert reg.value("c") == 3.0
+        with pytest.raises(KeyError):
+            reg.value("renamed.metric")
+
+
+# ---------------------------------------------------------------------------
+# Perfetto export
+# ---------------------------------------------------------------------------
+
+VALID_PHASES = {"X", "C", "i", "M", "s", "f"}
+
+
+class TestPerfettoExport:
+    @pytest.fixture(scope="class")
+    def trace(self, traced_mix):
+        _, res, sink = traced_mix
+        return pool_trace(res, sink.events)
+
+    def test_schema_fields_validate(self, trace):
+        events = trace["traceEvents"]
+        assert events
+        for e in events:
+            assert e["ph"] in VALID_PHASES
+            assert isinstance(e["pid"], int)
+            if e["ph"] != "M":
+                assert isinstance(e["ts"], float) and e["ts"] >= 0.0
+            if e["ph"] == "X":
+                assert e["dur"] >= 0.0
+            if e["ph"] == "i":
+                assert e["s"] == "t"
+
+    def test_all_four_processes_and_families_present(self, trace):
+        events = trace["traceEvents"]
+        pids = {e["pid"] for e in events}
+        assert pids == {1, 2, 3, 4}
+        decision_cats = {e["cat"] for e in events
+                         if e["ph"] == "i" and e["pid"] == 4}
+        assert decision_cats == set(FAMILIES)
+        counter_names = {e["name"] for e in events if e["ph"] == "C"}
+        assert {"co_running", "queue_depth",
+                "bw_share_demand"} <= counter_names
+
+    def test_flow_arrows_pair_revoke_to_relaunch(self, trace):
+        starts = [e for e in trace["traceEvents"] if e["ph"] == "s"]
+        finishes = [e for e in trace["traceEvents"] if e["ph"] == "f"]
+        assert starts and len(starts) == len(finishes)
+        by_id = {e["id"]: e for e in finishes}
+        for s in starts:
+            f = by_id[s["id"]]
+            assert f["bp"] == "e" and f["cat"] == s["cat"] == "preempt"
+            assert f["ts"] >= s["ts"]
+
+    def test_preempted_slices_appear_on_job_tracks(self, trace, traced_mix):
+        _, res, _ = traced_mix
+        assert res.n_preemptions > 0
+        pre = [e for e in trace["traceEvents"]
+               if e["ph"] == "X" and e.get("cat") == "preempted"]
+        assert len(pre) == res.n_preemptions
+        assert all(e["pid"] == 2 for e in pre)
+
+    def test_trace_round_trips_through_file(self, trace, tmp_path):
+        path = tmp_path / "trace.json"
+        write_trace(path, trace)
+        loaded = json.loads(path.read_text())
+        assert loaded == json.loads(json.dumps(trace))
+        assert loaded["displayTimeUnit"] == "ms"
+
+
+# ---------------------------------------------------------------------------
+# the shared logger
+# ---------------------------------------------------------------------------
+
+class TestLogging:
+    def test_get_logger_prefixes_the_root_name(self):
+        assert get_logger("repro.obs.test").name == "repro.obs.test"
+        assert get_logger("obs.test").name == "repro.obs.test"
+
+    def test_configure_logging_is_idempotent(self):
+        configure_logging("info")
+        configure_logging("debug")
+        root = logging.getLogger("repro")
+        assert len(root.handlers) == 1
+        assert root.level == logging.DEBUG

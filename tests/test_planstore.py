@@ -394,19 +394,32 @@ class TestPlanCachePersistence:
         assert set(loaded.curves) == {"a", "c"}, \
             "persisted recency must decide who gets evicted"
 
-    def test_corrupted_file_degrades_to_empty_with_warning(self, tmp_path):
+    # degraded loads log through the shared "repro" logger (WARNING on
+    # repro.multitenant.plancache), not warnings.warn — caplog asserts
+    # both the level/logger and that the message names the fallback
+
+    def test_corrupted_file_degrades_to_empty_with_warning(self, tmp_path,
+                                                           caplog):
         path = tmp_path / "cache.json"
         path.write_text("{ this is not json")
-        with pytest.warns(UserWarning, match="falling back to an empty"):
+        with caplog.at_level("WARNING", logger="repro.multitenant.plancache"):
             loaded = PlanCache.load(path)
         assert loaded.curves == {} and loaded.hits == 0
+        assert any("falling back to an empty" in r.getMessage()
+                   for r in caplog.records)
 
-    def test_missing_file_degrades_to_empty_with_warning(self, tmp_path):
-        with pytest.warns(UserWarning, match="falling back to an empty"):
+    def test_missing_file_degrades_to_empty_with_warning(self, tmp_path,
+                                                         caplog):
+        with caplog.at_level("WARNING", logger="repro.multitenant.plancache"):
             loaded = PlanCache.load(tmp_path / "nope.json")
         assert loaded.curves == {}
+        assert any(r.name == "repro.multitenant.plancache"
+                   and r.levelname == "WARNING"
+                   and "falling back to an empty" in r.getMessage()
+                   for r in caplog.records)
 
-    def test_version_mismatch_degrades_to_empty_with_warning(self, tmp_path):
+    def test_version_mismatch_degrades_to_empty_with_warning(self, tmp_path,
+                                                             caplog):
         cache = PlanCache()
         cache.insert("a", self._curve())
         path = tmp_path / "cache.json"
@@ -414,9 +427,10 @@ class TestPlanCachePersistence:
         payload = json.loads(path.read_text())
         payload["schema"] = 999
         path.write_text(json.dumps(payload))
-        with pytest.warns(UserWarning, match="schema version"):
+        with caplog.at_level("WARNING", logger="repro.multitenant.plancache"):
             loaded = PlanCache.load(path)
         assert loaded.curves == {}
+        assert any("schema version" in r.getMessage() for r in caplog.records)
 
     def test_fingerprint_binding_survives_round_trip(self, tmp_path):
         machine = SimMachine(seed=0)

@@ -427,6 +427,73 @@ def test_feedback_service_accounting_sums(graphs, scale):
         assert job.service == pytest.approx(granted + wasted, rel=1e-9)
 
 
+# ---------------------------------------------------------------------------
+# observability invariants (tracing must be bit-for-bit inert)
+# ---------------------------------------------------------------------------
+
+@settings(**DAG_SETTINGS)
+@given(graphs=st.lists(op_graphs(), min_size=2, max_size=3),
+       scale=st.floats(0.1, 1.5))
+def test_tracing_is_inert_on_random_preempting_mixes(graphs, scale):
+    """A live RecordingSink never changes a schedule: the fully-armed pool
+    (quadrant placement + ewma feedback + deadline preemption) produces
+    the bit-identical timeline traced and untraced, on arbitrary DAG
+    mixes — and the traced run must actually record events, so the
+    property can't pass vacuously with a disconnected sink."""
+    from repro.obs import RecordingSink
+
+    sink = RecordingSink()
+    _, pool_a, jobs_a = _traced_preempting_pool(graphs, scale, sink)
+    _, pool_b, jobs_b = _traced_preempting_pool(graphs, scale, None)
+    res_a, res_b = pool_a.run(), pool_b.run()
+    assert sink.events
+    assert res_a.makespan == res_b.makespan
+    assert res_a.n_preemptions == res_b.n_preemptions
+    for ja, jb in zip(jobs_a, jobs_b):
+        divs = compare_timelines(
+            timeline_rows(res_b.per_job_schedule(jb.jid)),
+            timeline_rows(res_a.per_job_schedule(ja.jid)),
+            label_a="untraced", label_b="traced")
+        assert not divs, divs[:5]
+
+
+def _traced_preempting_pool(graphs, deadline_scale, sink):
+    """_preempting_pool with a trace sink wired into the pool config."""
+    machine = SimMachine()
+    pool = RuntimePool(machine=machine,
+                       config=PoolConfig(
+                           max_active=4, topology="quadrant",
+                           feedback="ewma", sink=sink,
+                           preemption=PreemptionPolicy(enabled=True)))
+    jobs = [pool.submit(_blocker_graph(), name="blocker")]
+    for i, g in enumerate(graphs, start=1):
+        t = 1e-4 * i
+        job = pool.submit(g, name=f"j{i}", submit_time=t)
+        cp = max(job.cp.values(), default=0.0)
+        job.deadline = t + cp * deadline_scale
+        jobs.append(job)
+    return machine, pool, jobs
+
+
+@settings(**DAG_SETTINGS)
+@given(graphs=st.lists(op_graphs(), min_size=2, max_size=3),
+       scale=st.floats(0.1, 1.5))
+def test_event_metrics_match_pool_accounting_on_random_mixes(graphs, scale):
+    """metrics_from_events over the decision stream alone reproduces the
+    pool's service and restart-waste accounting on arbitrary mixes."""
+    from repro.obs import RecordingSink, metrics_from_events
+
+    sink = RecordingSink()
+    _, pool, jobs = _traced_preempting_pool(graphs, scale, sink)
+    res = pool.run()
+    ev = metrics_from_events(sink.events)
+    assert ev.value("pool.service_core_s") == \
+        sum(j.service for j in res.jobs)
+    assert ev.value("pool.total_ops") == res.total_ops
+    assert ev.value("pool.restart_waste_core_s") == \
+        res.metrics["pool.restart_waste_core_s"]
+
+
 class _CapAssertingQueue(JobQueue):
     """JobQueue that proves the admission-cap invariant at every pop
     (deterministic twin: tests/test_planstore.py::_AssertingQueue)."""
