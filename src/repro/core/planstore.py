@@ -99,6 +99,56 @@ def critical_path_from(graph: OpGraph,
     return cp
 
 
+# ---------------------------------------------------------------------------
+# move pricing — the preemption-economics currency
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MovePrice:
+    """One candidate scheduler move, priced in a single currency (seconds
+    or core-seconds — a price only ever compares against another price in
+    the same unit).  ``gain`` is the predicted benefit of making the move,
+    ``cost`` the re-billed restart waste it incurs; the scheduler makes
+    the move only when the gain STRICTLY exceeds the cost, so a move that
+    merely breaks even never discards partial work."""
+
+    gain: float
+    cost: float
+
+    @property
+    def worth_it(self) -> bool:
+        return self.gain > self.cost
+
+
+def restart_cost(threads: int, elapsed: float, restart_waste: float,
+                 efficiency: float = 1.0) -> float:
+    """Core-seconds of partial work a checkpoint-free revoke throws away,
+    re-billed at the machine's restart-waste factor (the same formula the
+    pool's ``refund`` charges back, so a priced move and the accounting
+    it triggers can never disagree)."""
+    return threads * elapsed * efficiency * restart_waste
+
+
+def claim_price(width: int, time_without: float, time_with: float,
+                waste: float) -> MovePrice:
+    """Multi-victim revoke, priced in core-seconds: the SLO gain is the
+    waiter's predicted-time improvement at its preferred ``width`` (vs
+    the best width reachable without the extra victims), weighted by that
+    width; the cost is the summed restart waste of the victim set."""
+    return MovePrice(gain=max(0.0, time_without - time_with) * width,
+                     cost=waste)
+
+
+def migration_price(remaining: float, relaunch_time: float, elapsed: float,
+                    restart_waste: float) -> MovePrice:
+    """Width migration, priced in op-seconds: relaunching is worth it only
+    when the predicted relaunch duration plus the re-billed waste (the
+    discarded ``elapsed`` at the restart-waste factor) strictly undercuts
+    finishing at the current width."""
+    return MovePrice(gain=remaining - relaunch_time,
+                     cost=elapsed * restart_waste)
+
+
 class PlanStore(abc.ABC):
     """Every prediction a scheduler consumes and every completion it
     produces, through one interface (see module docstring)."""

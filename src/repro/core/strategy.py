@@ -56,7 +56,8 @@ from repro.core.graph import Op
 from repro.core.interference import InterferenceRecorder, _pair_key
 from repro.core.placement import (REL_ANY, REL_CROSS, REL_LOCAL,
                                   place, placement_relation, quadrants_of)
-from repro.core.planstore import OBS_LAUNCH, OBS_REVOKE
+from repro.core.planstore import (OBS_LAUNCH, OBS_REVOKE, MovePrice,
+                                  claim_price, migration_price, restart_cost)
 from repro.core.simmachine import Placement, SimMachine
 from repro.obs.trace import (FAM_PLACEMENT, FAM_PREEMPTION, FAM_STRATEGY,
                              NullSink, TraceEvent, TraceSink)
@@ -148,6 +149,25 @@ class PreemptionPolicy:
     # time still remaining — never axe an op that would have finished before
     # the waiter anyway (the revoked partial work is pure waste)
     min_victim_advantage: float = 1.0
+    # ---- preemption economics (all OFF by default, so an enabled-but-
+    # otherwise-default policy behaves exactly as before) ----
+    # >1 arms multi-victim preemption: when one victim's cores cannot seat
+    # the overdue op's PREFERRED width, assemble a victim set (cheapest
+    # summed restart waste first, affinity-aware under quadrant topology)
+    # and revoke it atomically — but only when the priced SLO gain exceeds
+    # the summed waste (see repro.core.planstore.claim_price)
+    max_victims: int = 1
+    # admission-level eviction (pool tier, see RuntimePool): before any
+    # running work is revoked for an overdue waiter blocked in the
+    # admission queue, an admitted job with NO launched ops may be
+    # returned to the queue — a free move, zero restart waste
+    evict_admitted: bool = False
+    # width migration: a drain step that relaunches a running op at a
+    # different width when (predicted relaunch time + re-billed restart
+    # waste) strictly undercuts finishing at the current width (see
+    # repro.core.planstore.migration_price) — the move that un-sticks an
+    # op squeezed at claim time or priced wrong by a stale curve
+    migration: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -283,6 +303,11 @@ class StrategyAdapter(abc.ABC):
         """Accounting reversal for a revoked launch: un-charge the launch-
         time service and bill the wasted partial run instead (pool: at the
         machine's restart-waste factor)."""
+
+    def migrated(self, key: NodeKey, revoked: ScheduledOp) -> None:
+        """Bookkeeping hook for a width migration (the revoke/refund pair
+        already handled the accounting; this only lets the adapter count
+        the move separately from SLO preemptions — pool: Job.migrations)."""
 
 
 class StrategyCore:
@@ -547,45 +572,55 @@ class StrategyCore:
         running_classes = [r.op.op_class for r in running.values()]
         horizon = (remaining_horizon(running.values(), adapter.clock)
                    if running else float("inf"))
+        traced = self.sink.enabled
         for group in adapter.ready_groups():
             cand = [k for k in group if self._compatible(
                 adapter.op(k).op_class, running_classes)]
             if not cand:
                 continue
-            key = max(cand,
-                      key=lambda k: adapter.instance_plan(k).predicted_time)
-            plan = adapter.instance_plan(key)
-            if plan.threads > free:
-                plan = OpPlan(free, plan.variant,
-                              adapter.predict(key, free, plan.variant))
-            traced = self.sink.enabled
-            if plan.predicted_time > horizon * self.config.fallback_slack:
-                if traced:
-                    self._emit(FAM_STRATEGY, "reject", key, adapter.clock,
-                               cause="fallback_outlasts_horizon",
-                               op_class=adapter.op(key).op_class,
-                               predicted=plan.predicted_time,
-                               horizon=horizon,
-                               slack=self.config.fallback_slack)
-                continue
-            avoid = self._placement_avoid(adapter.op(key).op_class, adapter)
-            if avoid is None:
-                if traced:
-                    self._emit(FAM_STRATEGY, "reject", key, adapter.clock,
-                               cause="no_feasible_quadrant",
-                               op_class=adapter.op(key).op_class)
-                continue
-            cores = self._place(adapter, key, plan, avoid)
-            if cores is None:
-                if traced:
-                    self._emit(FAM_STRATEGY, "reject", key, adapter.clock,
-                               cause="no_placement",
-                               op_class=adapter.op(key).op_class,
-                               threads=plan.threads, avoid=sorted(avoid))
-                continue
-            self.launch(adapter, key, plan, hyper=False, cores=cores,
-                        path="fallback")
-            return True
+            # biggest first; on a PLACEMENT failure (quadrant topology
+            # only — flat placement cannot fail, so flat stays bit-for-bit
+            # the single-candidate fallback) try the next-biggest op in
+            # the SAME group instead of skipping the whole group.  A
+            # horizon failure still skips to the next group: every smaller
+            # op in this group outlasts the running set even harder at the
+            # same clamped width, and a later group's op may still fit.
+            order = sorted(
+                cand,
+                key=lambda k: -adapter.instance_plan(k).predicted_time)
+            for key in order:
+                plan = adapter.instance_plan(key)
+                if plan.threads > free:
+                    plan = OpPlan(free, plan.variant,
+                                  adapter.predict(key, free, plan.variant))
+                if plan.predicted_time > horizon * self.config.fallback_slack:
+                    if traced:
+                        self._emit(FAM_STRATEGY, "reject", key, adapter.clock,
+                                   cause="fallback_outlasts_horizon",
+                                   op_class=adapter.op(key).op_class,
+                                   predicted=plan.predicted_time,
+                                   horizon=horizon,
+                                   slack=self.config.fallback_slack)
+                    break
+                avoid = self._placement_avoid(adapter.op(key).op_class,
+                                              adapter)
+                if avoid is None:
+                    if traced:
+                        self._emit(FAM_STRATEGY, "reject", key, adapter.clock,
+                                   cause="no_feasible_quadrant",
+                                   op_class=adapter.op(key).op_class)
+                    continue
+                cores = self._place(adapter, key, plan, avoid)
+                if cores is None:
+                    if traced:
+                        self._emit(FAM_STRATEGY, "reject", key, adapter.clock,
+                                   cause="no_placement",
+                                   op_class=adapter.op(key).op_class,
+                                   threads=plan.threads, avoid=sorted(avoid))
+                    continue
+                self.launch(adapter, key, plan, hyper=False, cores=cores,
+                            path="fallback")
+                return True
         return False
 
     # ---- Strategy 4 ----------------------------------------------------
@@ -614,8 +649,15 @@ class StrategyCore:
                                     hyper=True):
                 continue
             inst = adapter.instance_plan(key)
-            plan = OpPlan(min(inst.threads, self.cores), inst.variant,
-                          inst.predicted_time)
+            threads = min(inst.threads, self.cores)
+            if threads == inst.threads:
+                plan = inst
+            else:
+                # clamped width => re-predict at the clamped width (same
+                # rule as the run_biggest clamp); keeping the unclamped
+                # width's predicted_time would mis-price the launch
+                plan = OpPlan(threads, inst.variant,
+                              adapter.predict(key, threads, inst.variant))
             self.launch(adapter, key, plan, hyper=True, path="s4_hyper")
             return True
         return False
@@ -686,14 +728,17 @@ class StrategyCore:
         # beats the waste of revoking someone's partial work)
         traced = self.sink.enabled
         waiter_slack = adapter.deadline_slack(key)
-        victim_key = None
+        victim_keys: list[NodeKey] = []
+        prefer: OpPlan | None = None       # multi-victim: seat this width
+        price: MovePrice | None = None
+        n_eligible = 0
         if must_preempt or (free < need
                             and free < max(floor, (need + 1) // 2)):
-            # pick the victim BEFORE revoking so a failed fit leaves the
-            # running set untouched
+            # pick the victim(s) BEFORE revoking so a failed fit leaves
+            # the running set untouched
             slack = waiter_slack
-            victims = []
-            for vk, r in running.items():
+            eligible: list[tuple[NodeKey, ScheduledOp, int, float]] = []
+            for idx, (vk, r) in enumerate(running.items()):
                 if r.hyper or r.start >= adapter.clock:
                     continue
                 vs = adapter.deadline_slack(vk)
@@ -702,53 +747,84 @@ class StrategyCore:
                 remaining = r.finish - adapter.clock
                 if remaining <= pred * pol.min_victim_advantage:
                     continue               # it finishes before the waiter
-                victims.append((remaining, vk))
-            if victims:
-                _, victim_key = max(victims)
+                eligible.append((vk, r, idx, remaining))
+            n_eligible = len(eligible)
+            victim_key = None
+            if eligible:
+                # largest remaining time; ties break on the scheduler-
+                # meaningful key — fewest threads revoked (cheapest claim),
+                # then the earliest-launched runner (stable launch order) —
+                # never on the opaque NodeKey
+                victim_key = max(
+                    eligible,
+                    key=lambda e: (e[3], -e[1].threads, -e[2]))[0]
                 if (not must_preempt
                         and free + running[victim_key].threads < floor):
                     victim_key = None      # revoking gains too little
-            if victim_key is None and (must_preempt or free < floor):
+            if victim_key is not None:
+                victim_keys = [victim_key]
+            if pol.max_victims > 1 and not serial and eligible:
+                mv = self._assemble_victim_set(adapter, key, eligible,
+                                               free, victim_key)
+                if mv is not None:
+                    victim_keys, prefer, price = mv
+            if not victim_keys and (must_preempt or free < floor):
                 if traced:
                     self._emit(FAM_PREEMPTION, "no_victim", key,
                                adapter.clock, op_class=op.op_class,
                                waiter_slack=waiter_slack, free=free,
-                               need=need, n_candidates=len(victims))
+                               need=need, n_candidates=n_eligible)
                 return False               # nothing useful to claim now
         rest = [r.op.op_class for vk, r in running.items()
-                if vk != victim_key]
+                if vk not in victim_keys]
         if not self._compatible(op.op_class, rest):
             if traced:
                 self._emit(FAM_PREEMPTION, "incompatible", key,
                            adapter.clock, op_class=op.op_class,
                            waiter_slack=waiter_slack)
             return False
-        if victim_key is not None:
-            revoked = adapter.revoke(victim_key)
-            elapsed = adapter.clock - revoked.start
-            if traced:
-                self._emit(FAM_PREEMPTION, "revoke", key, adapter.clock,
-                           op_class=op.op_class, waiter_slack=waiter_slack,
-                           waiter_pred=pred, victim=victim_key,
-                           victim_class=revoked.op.op_class,
-                           victim_threads=revoked.threads,
-                           victim_remaining=revoked.finish - adapter.clock,
-                           victim_elapsed=elapsed,
-                           n_candidates=len(victims))
-            adapter.refund(victim_key, revoked, elapsed)
-            adapter.observe(victim_key, revoked, OBS_REVOKE, elapsed)
+        if victim_keys:
+            for vk in victim_keys:
+                revoked = adapter.revoke(vk)
+                elapsed = adapter.clock - revoked.start
+                if traced:
+                    self._emit(FAM_PREEMPTION, "revoke", key, adapter.clock,
+                               op_class=op.op_class,
+                               waiter_slack=waiter_slack,
+                               waiter_pred=pred, victim=vk,
+                               victim_class=revoked.op.op_class,
+                               victim_threads=revoked.threads,
+                               victim_remaining=(revoked.finish
+                                                 - adapter.clock),
+                               victim_elapsed=elapsed,
+                               n_candidates=n_eligible,
+                               set_size=len(victim_keys))
+                adapter.refund(vk, revoked, elapsed)
+                adapter.observe(vk, revoked, OBS_REVOKE, elapsed)
             free = self.free(adapter)
+            if traced and prefer is not None:
+                self._emit(FAM_PREEMPTION, "multi_revoke", key,
+                           adapter.clock, op_class=op.op_class,
+                           waiter_slack=waiter_slack,
+                           victims=list(victim_keys),
+                           prefer_threads=prefer.threads,
+                           gain=price.gain, waste=price.cost)
         elif traced:
             # the throughput guard is waived: the overdue op launches into
             # idle cores even though it may outlast the running set
             self._emit(FAM_PREEMPTION, "waive", key, adapter.clock,
                        op_class=op.op_class, waiter_slack=waiter_slack,
                        free=free, need=need)
-        # fewest-thread admissible candidate, horizon deliberately waived;
-        # clamp to the claimed cores when the preferred width is unreachable
-        pick = pick_admissible(cands, free, float("inf"))
-        if pick is None:
-            pick = min(cands, key=lambda c: c.threads)
+        # multi-victim claims launch at the preferred width the set was
+        # priced to seat; otherwise fewest-thread admissible candidate,
+        # horizon deliberately waived; clamp to the claimed cores when the
+        # preferred width is unreachable
+        if prefer is not None:
+            pick = prefer
+        else:
+            pick = pick_admissible(cands, free, float("inf"))
+            if pick is None:
+                pick = min(cands, key=lambda c: c.threads)
         pick = adapter.clamp(key, pick)
         if pick.threads > free:
             if traced:
@@ -771,6 +847,164 @@ class StrategyCore:
             cores = self._place(adapter, key, pick, frozenset())
         self.launch(adapter, key, pick, hyper=False, cores=cores,
                     path="deadline_claim")
+        return True
+
+    def _assemble_victim_set(
+            self, adapter: StrategyAdapter, key: NodeKey,
+            eligible: list[tuple[NodeKey, ScheduledOp, int, float]],
+            free: int, single_key: NodeKey | None,
+    ) -> tuple[list[NodeKey], OpPlan, MovePrice] | None:
+        """Multi-victim preemption (``PreemptionPolicy.max_victims > 1``):
+        a victim SET that seats the overdue op's preferred width when the
+        single longest-remaining victim cannot.
+
+        Victims are accumulated cheapest summed re-billed restart waste
+        first, affinity-aware under quadrant topology (a victim whose
+        cores sit in the waiter's preferred quadrant frees the cores the
+        placement actually wants).  The set is adopted — atomically, no
+        revoke happens on a failed price check — only when the priced SLO
+        gain (predicted-time improvement at the preferred width, weighted
+        by that width) STRICTLY exceeds the summed waste of the whole set
+        (``repro.core.planstore.claim_price``).  Returns ``(victims,
+        preferred_plan, price)`` or ``None`` to fall back to the
+        single-victim move."""
+        pol = self.config.preemption
+        spec = self.machine.spec
+        inst = adapter.instance_plan(key)
+        prefer_w = min(inst.threads, self.cores)
+        achievable = free + (adapter.running[single_key].threads
+                             if single_key is not None else 0)
+        if achievable >= prefer_w:
+            return None                    # the single move already seats it
+        t_with = (inst.predicted_time if prefer_w == inst.threads
+                  else adapter.predict(key, prefer_w, inst.variant))
+        hint = (adapter.placement_hint(key)
+                if self.config.topology == "quadrant" else None)
+
+        def waste_of(r: ScheduledOp) -> float:
+            return restart_cost(r.threads, adapter.clock - r.start,
+                                spec.restart_waste)
+
+        def affinity(r: ScheduledOp) -> int:
+            if hint is None or not r.cores:
+                return 1
+            return 0 if any(spec.quadrant_of_core(c) == hint
+                            for c in r.cores) else 1
+
+        order = sorted(eligible,
+                       key=lambda e: (affinity(e[1]), waste_of(e[1]), e[2]))
+        chosen: list[NodeKey] = []
+        width = free
+        waste = 0.0
+        for vk, r, _, _ in order:
+            if len(chosen) >= pol.max_victims or width >= prefer_w:
+                break
+            chosen.append(vk)
+            width += r.threads
+            waste += waste_of(r)
+        if width < prefer_w:
+            return None                    # even the full set can't seat it
+        # the no-multi-victim alternative: launch at the best width the
+        # single move reaches, or (machine fully busy, no single victim
+        # viable) wait out the shortest eligible runner first
+        if achievable >= 1:
+            t_without = adapter.predict(key, achievable, inst.variant)
+        else:
+            t_without = min(rem for *_, rem in eligible) + t_with
+        price = claim_price(prefer_w, t_without, t_with, waste)
+        if not price.worth_it:
+            if self.sink.enabled:
+                self._emit(FAM_PREEMPTION, "multi_too_costly", key,
+                           adapter.clock, op_class=adapter.op(key).op_class,
+                           victims=list(chosen), prefer_threads=prefer_w,
+                           gain=price.gain, waste=price.cost)
+            return None
+        return chosen, OpPlan(prefer_w, inst.variant, t_with), price
+
+    # ---- width migration ------------------------------------------------
+    def try_migrate(self, adapter: StrategyAdapter) -> bool:
+        """Relaunch one running op at a different width when that is
+        priced strictly cheaper than letting it finish where it is
+        (``PreemptionPolicy.migration``; see ``migration_price``).
+
+        Two situations make this win: the op was SQUEEZED at claim time
+        (deadline path clamped it to whatever was free) and cores have
+        since freed up, or the PlanStore's corrected curve moved the op's
+        best width under ``feedback="ewma"``.  The move reuses the
+        preemption machinery — revoke, refund (the discarded partial run
+        is re-billed at the restart-waste factor), observe — and then
+        relaunches the SAME node immediately, so exactly-once completion
+        holds by construction.  A relaunch starts at the current clock and
+        runners started at this instant are never migrated, so one
+        scheduling instant cannot ping-pong an op between widths."""
+        pol = self.config.preemption
+        if not (pol.enabled and pol.migration):
+            return False
+        clock = adapter.clock
+        free = self.free(adapter)
+        quadrant = self.config.topology == "quadrant"
+        spec = self.machine.spec
+        best = None      # (net, key, plan, cores, price)
+        for key, r in adapter.running.items():
+            if r.hyper or r.start >= clock:
+                continue
+            remaining = r.finish - clock
+            elapsed = clock - r.start
+            budget = free + r.threads
+            others = [o for k2, o in adapter.running.items() if k2 != key]
+            other_loads = [(o.threads, o.cores) for o in others]
+            busy = frozenset(c for o in others for c in o.cores)
+            for c in adapter.candidates_for(key, self.config.candidates):
+                if c.threads > budget:
+                    continue
+                if c.threads == r.threads and c.variant == r.variant:
+                    continue               # same config: nothing to migrate
+                if adapter.clamp(key, c) != c:
+                    continue               # S2 hysteresis vetoes the width
+                cores: tuple[int, ...] = ()
+                if quadrant:
+                    placed = place(spec, c.threads, busy,
+                                   cache_sharing=c.variant,
+                                   prefer=adapter.placement_hint(key),
+                                   avoid=frozenset())
+                    if placed is None:
+                        continue
+                    cores = placed
+                    share = self.machine.quadrant_bw_share(
+                        cores, other_loads)
+                else:
+                    share = self.bw_share(c.threads,
+                                          (o.threads for o in others))
+                # price the move against the duration the relaunch will
+                # ACTUALLY get (contention-aware, same formula launch()
+                # applies after the revoke) — not the solo curve
+                dur = self._duration(r.op, c, False, share)
+                price = migration_price(remaining, dur, elapsed,
+                                        spec.restart_waste)
+                if not price.worth_it:
+                    continue
+                net = price.gain - price.cost
+                if best is None or net > best[0]:
+                    best = (net, key, c, cores, price)
+        if best is None:
+            return False
+        _, key, plan, cores, price = best
+        revoked = adapter.revoke(key)
+        elapsed = clock - revoked.start
+        if self.sink.enabled:
+            self._emit(FAM_PREEMPTION, "migrate", key, clock,
+                       op_class=revoked.op.op_class,
+                       from_threads=revoked.threads,
+                       to_threads=plan.threads,
+                       from_variant=revoked.variant,
+                       to_variant=plan.variant,
+                       remaining=revoked.finish - clock,
+                       elapsed=elapsed, gain=price.gain, cost=price.cost)
+        adapter.refund(key, revoked, elapsed)
+        adapter.observe(key, revoked, OBS_REVOKE, elapsed)
+        adapter.migrated(key, revoked)
+        self.launch(adapter, key, plan, hyper=False, cores=cores,
+                    path="migrate")
         return True
 
     # ---- the launch fixpoint loop --------------------------------------
@@ -804,5 +1038,10 @@ class StrategyCore:
                     launched = self.run_biggest(adapter)
             elif not adapter.running:
                 launched = self.run_biggest(adapter)
+            if not launched:
+                # width migration before the HT lane: re-seating a running
+                # op on real cores beats topping up the 0.55-efficiency
+                # hyper-thread lane (a no-op unless the policy arms it)
+                launched = self.try_migrate(adapter)
             if not launched:
                 launched = self.try_hyper(adapter)

@@ -9,6 +9,10 @@ Deadline/SLO knobs: ``--deadlines`` gives each job an absolute deadline
 (submit time + per-job budget) and ``--preempt`` arms checkpoint-free
 op preemption, so a tenant that runs out of slack can revoke the
 longest-remaining running op (see ``repro.core.strategy.PreemptionPolicy``).
+The preemption-economics knobs (``--max-victims``, ``--evict-admitted``,
+``--migrate``) arm the priced moves on top of that — multi-victim revoke,
+free admission-level eviction, and width migration; each implies
+``--preempt``.
 
 Closed-loop knobs: ``--feedback ewma`` arms the adaptive plan store
 (observed service EWMA-corrects every prediction — candidate ranking,
@@ -57,6 +61,23 @@ def main() -> None:
                          "note --deadlines alone already reorders "
                          "admission/fair-share — only a run with neither "
                          "flag is bit-for-bit the PR-2 pool)")
+    ap.add_argument("--max-victims", type=int, default=1,
+                    help="preemption economics: >1 lets the deadline path "
+                         "revoke a SET of runners (cheapest summed restart "
+                         "waste first, affinity-aware) when one victim "
+                         "cannot seat the overdue op's preferred width — "
+                         "only when the priced SLO gain exceeds the "
+                         "summed waste (implies --preempt)")
+    ap.add_argument("--evict-admitted", action="store_true",
+                    help="preemption economics: return an admitted job "
+                         "with no launched ops to the queue when that "
+                         "unblocks an overdue deadlined waiter — the free "
+                         "move, zero restart waste (implies --preempt)")
+    ap.add_argument("--migrate", action="store_true",
+                    help="preemption economics: relaunch a running op at "
+                         "a different width when predicted-remaining-time "
+                         "gain strictly exceeds the re-billed restart "
+                         "waste (implies --preempt)")
     ap.add_argument("--reservation-window", type=float, default=0.0,
                     help="hold the last active slot for a higher-priority "
                          "deadlined arrival due within this many seconds")
@@ -138,8 +159,13 @@ def main() -> None:
             topology=(args.topology if args.topology != "flat" else None),
             feedback=(args.feedback if args.feedback != "off" else None),
             sink=sink,
-            preemption=(PreemptionPolicy(enabled=True)
-                        if args.preempt else None)))
+            preemption=(PreemptionPolicy(
+                enabled=True,
+                max_victims=max(1, args.max_victims),
+                evict_admitted=args.evict_admitted,
+                migration=args.migrate)
+                if (args.preempt or args.max_victims > 1
+                    or args.evict_admitted or args.migrate) else None)))
     for i, (model, prio, budget) in enumerate(zip(models, prios, budgets)):
         submit_time = i * args.arrival_gap
         pool.submit(build_paper_graph(model, scale=args.scale),
@@ -173,6 +199,8 @@ def main() -> None:
                               if j.admitted_demand is not None
                               else j.demand),
             "preemptions": j.preemptions,      # launches revoked FROM j
+            "evictions": j.evictions,          # admission-level bounces
+            "migrations": j.migrations,        # priced width re-seats
             **({"deadline_s": j.deadline,
                 "deadline_met": (j.latency is not None
                                  and j.finish_time <= j.deadline)}
@@ -193,6 +221,8 @@ def main() -> None:
         "slowdown_fairness_sched_jain": res.slowdown_fairness(
             serial.job_makespans, include_queue_wait=False),
         "preemptions": res.n_preemptions,
+        "evictions": res.n_evictions,
+        "migrations": res.n_migrations,
         "feedback": args.feedback,
         **({"feedback_stats": res.feedback_stats}
            if res.feedback_stats is not None else {}),

@@ -70,6 +70,18 @@ class Job:
     service: float = 0.0              # core-seconds granted so far
     ops_done: int = 0
     preemptions: int = 0              # launches revoked from this job
+    # admission-level evictions: times this job was returned to the queue
+    # while admitted with no launched ops (the FREE preemption-economics
+    # move — zero restart waste; see PreemptionPolicy.evict_admitted)
+    evictions: int = 0
+    # width migrations: launches of this job revoked and immediately
+    # relaunched at a different width (PreemptionPolicy.migration);
+    # counted separately from ``preemptions`` (which includes them at the
+    # sim level) so reporting can tell an SLO revoke from a priced re-seat
+    migrations: int = 0
+    # the queue-order ticket assigned at FIRST submit and reused on every
+    # readmit, so an evicted job re-enters under its ORIGINAL submit order
+    queue_seq: int | None = None
     # quadrant of the job's most recent placed launch (topology="quadrant"
     # only) — the pool's tenant-to-quadrant affinity hint
     last_quadrant: int | None = None
@@ -197,11 +209,25 @@ class JobQueue:
         self.submitted: list[Job] = []
 
     def submit(self, job: Job) -> None:
+        if job.queue_seq is None:
+            job.queue_seq = next(self._seq)
+        self._enqueue(job)
+        self.submitted.append(job)
+
+    def readmit(self, job: Job) -> None:
+        """Return an EVICTED job to the queue (admission-level preemption,
+        see ``PreemptionPolicy.evict_admitted``).  The job keeps its
+        original ``submit_time`` and ``queue_seq``, so it re-enters under
+        exactly its original submit order — eviction defers the tenant, it
+        never demotes it.  Not appended to ``submitted`` again: it is the
+        same submission, bounced back."""
+        self._enqueue(job)
+
+    def _enqueue(self, job: Job) -> None:
         deadline = job.deadline if job.deadline is not None else float("inf")
         bisect.insort(self._waiting,
                       (-job.priority, deadline, job.submit_time,
-                       next(self._seq), job))
-        self.submitted.append(job)
+                       job.queue_seq, job))
 
     def __len__(self) -> int:
         return len(self._waiting)
@@ -277,6 +303,14 @@ class JobQueue:
         return any(h.priority > job.priority and h.deadline is not None
                    and now < h.submit_time <= horizon
                    for *_, h in self._waiting)
+
+    def peek_admissible(self, active: list[Job],
+                        now: float = float("inf")) -> Job | None:
+        """The job ``pop_admissible`` WOULD hand out, without removing it
+        — the eviction path's what-if probe: 'if the active set were
+        ``active``, who would be admitted?'."""
+        i, _ = self._admissible_index(active, now)
+        return self._waiting[i][4] if i is not None else None
 
     def pop_admissible(self, active: list[Job],
                        now: float = float("inf")) -> Job | None:

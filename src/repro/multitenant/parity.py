@@ -41,7 +41,7 @@ from typing import Iterable
 from repro.core.graph import OpGraph, build_paper_graph
 from repro.core.runtime import ConcurrencyRuntime, RuntimeConfig
 from repro.core.simmachine import SimMachine
-from repro.core.strategy import ScheduleResult
+from repro.core.strategy import PreemptionPolicy, ScheduleResult
 from repro.multitenant.pool import PoolConfig, RuntimePool
 from repro.obs.trace import RecordingSink
 
@@ -130,12 +130,15 @@ def check_parity(models: Iterable[str] = ("resnet50", "dcgan"), *,
     """Pool-vs-corun parity over paper-zoo models, plus the closed-loop
     zero-error leg and the trace-inertness leg.
 
-    Per model, FIVE timelines must agree bitwise with the single-graph
-    ``feedback="off"`` reference: the single-job pool (the strategy-core
-    differential), a single-job pool with a live ``RecordingSink`` (the
-    observability lock — tracing must be bit-for-bit inert, and a traced
-    run that records ZERO events is itself flagged, so the leg can't
-    pass vacuously with a disconnected sink), and both schedulers re-run
+    Per model, FIVE pool/corun timelines must agree bitwise with the
+    single-graph ``feedback="off"`` reference: the single-job pool (the
+    strategy-core differential), a single-job pool with a live
+    ``RecordingSink`` (the observability lock — tracing must be
+    bit-for-bit inert, and a traced run that records ZERO events is
+    itself flagged, so the leg can't pass vacuously with a disconnected
+    sink), a preemption-ENABLED pool with the economics knobs at their
+    off defaults and no deadlines (the preemption-economics surface must
+    be inert unless armed AND triggered), and both schedulers re-run
     with ``feedback="ewma"`` on a zero-error observation stream (the
     blend-math lock — an exact observation may not move any prediction).
 
@@ -159,6 +162,14 @@ def check_parity(models: Iterable[str] = ("resnet50", "dcgan"), *,
                 graph, SimMachine(seed=seed),
                 pool_config=PoolConfig(max_active=1, runtime=base,
                                        sink=sink)),
+            # preemption armed, economics knobs at their OFF defaults, no
+            # deadlines: the whole preemption-economics surface must be
+            # inert — bit-for-bit the plain pool (the PR-6 behavior lock)
+            "pool-preempt": pool_timeline(
+                graph, SimMachine(seed=seed),
+                pool_config=PoolConfig(
+                    max_active=1, runtime=base,
+                    preemption=PreemptionPolicy(enabled=True))),
             "corun-ewma0": corun_timeline(graph, SimMachine(seed=seed),
                                           fb, zero_error=True),
             "pool-ewma0": pool_timeline(graph, SimMachine(seed=seed), fb,

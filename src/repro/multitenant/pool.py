@@ -65,8 +65,8 @@ from repro.core.perfmodel import cross_graph_key
 from repro.core.planstore import (OBS_FINISH, OBS_REVOKE, CorrectionTable,
                                   OpObservation, make_plan_store)
 from repro.obs.metrics import pool_metrics
-from repro.obs.trace import (FAM_ADMISSION, FAM_PLANSTORE, FAM_STRATEGY,
-                             NULL_SINK, TraceEvent, TraceSink)
+from repro.obs.trace import (FAM_ADMISSION, FAM_PLANSTORE, FAM_PREEMPTION,
+                             FAM_STRATEGY, NULL_SINK, TraceEvent, TraceSink)
 from repro.core.runtime import ConcurrencyRuntime, RuntimeConfig
 from repro.core.simmachine import SimMachine
 from repro.core.strategy import (PreemptionPolicy, ScheduledOp,
@@ -260,6 +260,19 @@ class PoolResult:
         return sum(len(r) for r in self.preempted.values())
 
     @property
+    def n_evictions(self) -> int:
+        """Admission-level evictions across all jobs (free moves — the
+        evicted tenant had no launched ops, so no restart waste)."""
+        return sum(j.evictions for j in self.jobs)
+
+    @property
+    def n_migrations(self) -> int:
+        """Width migrations across all jobs (these launches also appear in
+        ``preempted`` as partial records — the sim bills them the same
+        way — but they were immediately relaunched at a new width)."""
+        return sum(j.migrations for j in self.jobs)
+
+    @property
     def aggregate_throughput(self) -> float:
         """Ops completed per second across all tenants."""
         return self.total_ops / max(self.makespan, 1e-12)
@@ -302,8 +315,14 @@ class PoolResult:
 
     @property
     def mean_latency(self) -> float:
+        """Mean submit-to-finish latency over FINISHED jobs, or NaN when
+        no job finished — a run where nothing completed must not report
+        the same 0.0 as a perfect one (NaN also poisons any aggregate
+        a bench builds from it, so the failure can't hide)."""
         lats = [j.latency for j in self.jobs if j.latency is not None]
-        return sum(lats) / max(len(lats), 1)
+        if not lats:
+            return float("nan")
+        return sum(lats) / len(lats)
 
     def per_job_schedule(self, jid: int) -> ScheduleResult:
         """One job's records in the single-graph result type (global
@@ -487,6 +506,12 @@ class _PoolAdapter(StrategyAdapter):
                                "priority": job.priority, "refund": refund,
                                "waste": waste, "elapsed": elapsed}))
 
+    def migrated(self, key: NodeKey, revoked: ScheduledOp) -> None:
+        # the sim-level revoke already counted a preemption; migrations
+        # get their own per-job counter so reporting can tell a priced
+        # width re-seat from an SLO revoke
+        self._job(key).migrations += 1
+
 
 class PoolScheduler:
     """Thin multi-job adapter over ``StrategyCore`` (Strategies 3/4 across
@@ -567,6 +592,7 @@ class RuntimePool:
         strat = self.config.strategy_config()
         self.feedback = strat.feedback
         self.sink = strat.sink
+        self._preemption = strat.preemption
         self.corrections = (CorrectionTable()
                             if self.feedback != "off" else None)
         self._refreshed_at = 0      # corrections.observed at last refresh
@@ -646,12 +672,76 @@ class RuntimePool:
                 job.cp = job.store.remaining_critical_path(job.graph,
                                                            job.plan)
 
+    # ---- admission-level eviction (preemption economics) ----------------
+    def _root_slack(self, job: Job, now: float) -> float | None:
+        """Whole-job deadline slack: time to the SLO minus the job's
+        longest remaining critical path (None = best-effort)."""
+        if job.deadline is None:
+            return None
+        return job.deadline - now - max(job.cp.values(), default=0.0)
+
+    def _try_evict(self, sim: _PoolSim, active: list[Job]) -> bool:
+        """The FREE preemption-economics move: return one admitted job
+        with NO launched ops to the queue when that unblocks the admission
+        of an overdue deadlined waiter.
+
+        Zero restart waste by construction — the victim has no running
+        launches, no completed records, and no revoked partials, so there
+        is no work to discard and nothing to re-bill; it re-enters the
+        queue under its original submit order (``JobQueue.readmit``).
+        Tried by ``_admit`` BEFORE the running-work preemption path can
+        act for the waiter: a free move always beats a priced one.  The
+        victim must be strictly less late than the waiter (best-effort, or
+        more slack), so eviction chains terminate and never ping-pong."""
+        pol = self._preemption
+        if not (pol.enabled and pol.evict_admitted) or not len(self.queue):
+            return False
+        now = sim.clock
+        idle = [j for j in active
+                if not sim.records[j.jid] and not sim.preempted[j.jid]
+                and not any(k[0] == j.jid for k in sim.running)]
+        # least-urgent victim first (lowest dynamic priority, then the
+        # most recently admitted — it has the least claim on its slot)
+        idle.sort(key=lambda j: (j.effective_priority(now),
+                                 -(j.admit_time or 0.0), -j.jid))
+        for victim in idle:
+            rest = [j for j in active if j.jid != victim.jid]
+            waiter = self.queue.peek_admissible(rest, now)
+            if waiter is None:
+                continue           # evicting this one unblocks nothing
+            ws = self._root_slack(waiter, now)
+            if ws is None or ws > 0.0:
+                continue           # only an overdue SLO tenant justifies it
+            vs = self._root_slack(victim, now)
+            if vs is not None and vs <= ws:
+                continue           # never bounce a tenant just as late
+            if self.sink.enabled:
+                self.sink.emit(TraceEvent(
+                    ts=now, family=FAM_PREEMPTION, kind="evict",
+                    key=victim.jid,
+                    data={"job": victim.name, "waiter_jid": waiter.jid,
+                          "waiter": waiter.name, "waiter_slack": ws,
+                          "victim_slack": vs,
+                          "queue_depth": len(self.queue)}))
+            active.remove(victim)
+            for d in (sim.graphs, sim.jobs, sim.pending, sim.ready,
+                      sim.records, sim.completed, sim.preempted):
+                d.pop(victim.jid, None)
+            victim.admit_time = None
+            victim.admitted_demand = None
+            victim.evictions += 1
+            self.queue.readmit(victim)
+            return True
+        return False
+
     def _admit(self, sim: _PoolSim, active: list[Job]) -> None:
         self._refresh_waiting_estimates()
         traced = self.sink.enabled
         while True:
             job = self.queue.pop_admissible(active, now=sim.clock)
             if job is None:
+                if self._try_evict(sim, active):
+                    continue
                 if traced:
                     # only arrived-but-blocked tenants are admission
                     # DECISIONS; an empty queue or not-yet-arrived jobs
@@ -699,6 +789,19 @@ class RuntimePool:
                 continue
             for uid in uids:
                 t = job.deadline - job.cp.get(uid, 0.0)
+                if t > sim.clock and (expiry is None or t < expiry):
+                    expiry = t
+        if self._preemption.enabled and self._preemption.evict_admitted:
+            # with admission-level eviction armed, a QUEUED deadlined
+            # tenant going overdue is a scheduling instant too — that is
+            # the moment _try_evict may bounce an idle admitted job for
+            # it.  A tenant already overdue at arrival expires the moment
+            # it arrives (max with submit_time).
+            for job in self.queue.waiting_jobs():
+                if job.deadline is None:
+                    continue
+                t = max(job.submit_time,
+                        job.deadline - max(job.cp.values(), default=0.0))
                 if t > sim.clock and (expiry is None or t < expiry):
                     expiry = t
         return expiry

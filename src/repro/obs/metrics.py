@@ -156,6 +156,13 @@ def pool_metrics(result, *, spec=None, cache_stats=None,
     reg.counter("pool.total_ops").inc(result.total_ops)
     reg.gauge("pool.throughput_ops_s").set(result.aggregate_throughput)
     reg.counter("pool.preemptions").inc(result.n_preemptions)
+    # preemption economics (0 on every pool that leaves the knobs off):
+    # evictions are free admission-level bounces, migrations are priced
+    # width re-seats (also present in the preempted partials they revoked)
+    reg.counter("pool.evictions").inc(
+        sum(getattr(j, "evictions", 0) for j in result.jobs))
+    reg.counter("pool.migrations").inc(
+        sum(getattr(j, "migrations", 0) for j in result.jobs))
     service = 0.0
     shares = []
     for j in result.jobs:

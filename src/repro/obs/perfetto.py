@@ -179,6 +179,12 @@ def pool_trace(result, events: Iterable[TraceEvent] = ()) -> dict:
     (jid -> launches), ``preempted`` (jid -> revoked partials), and
     ``events`` (the (time, #co-running) signal)."""
     trace: list[dict] = []
+    events = list(events)
+    # width migrations revoke + relaunch at one instant; the decision
+    # event marks which revoke→relaunch arrows are migrations so the flow
+    # name distinguishes a priced re-seat from an SLO preemption
+    migrates = {(e.key, e.ts) for e in events
+                if e.family == "preemption" and e.kind == "migrate"}
     names = {j.jid: f"j{j.jid}:{j.name}" for j in result.jobs}
     trace.extend(_meta(CORES_PID, "cores"))
     trace.extend(_meta(JOBS_PID, "jobs"))
@@ -204,8 +210,11 @@ def pool_trace(result, events: Iterable[TraceEvent] = ()) -> dict:
                 key=lambda r: r.start, default=None)
             if relaunch is not None:
                 flow_id += 1
+                name = ("migrate→relaunch"
+                        if ((jid, p.op.uid), p.finish) in migrates
+                        else "revoke→relaunch")
                 trace.extend(_flow_pair(flow_id, p.finish, relaunch.start,
-                                        tid, "revoke→relaunch"))
+                                        tid, name))
     for ts, n in result.events:
         trace.append(_counter("co_running", ts, float(n), "ops"))
     if result.events:

@@ -309,6 +309,116 @@ def test_preemption_enabled_without_deadlines_matches_corun(graph):
 
 
 # ---------------------------------------------------------------------------
+# preemption-economics invariants (multi-victim / eviction / migration)
+# ---------------------------------------------------------------------------
+
+# every economics move armed at once: the invariants below must hold with
+# victim sets revoked atomically, admitted jobs bounced back to the queue,
+# and running ops re-seated at new widths mid-flight
+_ECON_POLICY = PreemptionPolicy(enabled=True, max_victims=4,
+                                evict_admitted=True, migration=True)
+
+
+def _economics_pool(graphs, deadline_scale):
+    """_preempting_pool with the full economics policy armed (a tighter
+    max_active so admission-level eviction has queue pressure to act on)."""
+    machine = SimMachine()
+    pool = RuntimePool(machine=machine,
+                       config=PoolConfig(max_active=2,
+                                         preemption=_ECON_POLICY))
+    jobs = [pool.submit(_blocker_graph(), name="blocker")]
+    for i, g in enumerate(graphs, start=1):
+        t = 1e-4 * i
+        job = pool.submit(g, name=f"j{i}", submit_time=t)
+        cp = max(job.cp.values(), default=0.0)
+        job.deadline = t + cp * deadline_scale
+        jobs.append(job)
+    return machine, pool, jobs
+
+
+@settings(**DAG_SETTINGS)
+@given(graphs=st.lists(op_graphs(), min_size=2, max_size=3),
+       scale=st.floats(0.1, 1.5))
+def test_economics_every_op_completes_exactly_once(graphs, scale):
+    """Work conservation under the full economics policy: victim-set
+    revokes, admission evictions, and width migrations all return work to
+    a frontier it leaves exactly once — every op still completes exactly
+    once and dependencies hold."""
+    machine, pool, jobs = _economics_pool(graphs, scale)
+    res = pool.run()
+    for job in jobs:
+        recs = res.records[job.jid]
+        assert len(recs) == job.graph.n_ops
+        assert len({r.op.uid for r in recs}) == job.graph.n_ops
+        start = {r.op.uid: r.start for r in recs}
+        finish = {r.op.uid: r.finish for r in recs}
+        for op in job.graph.ops.values():
+            for d in op.deps:
+                assert finish[d] <= start[op.uid] + 1e-12
+        for p in res.preempted[job.jid]:
+            assert start[p.op.uid] >= p.finish - 1e-15
+
+
+@settings(**DAG_SETTINGS)
+@given(graphs=st.lists(op_graphs(), min_size=2, max_size=3),
+       scale=st.floats(0.1, 1.5))
+def test_economics_never_oversubscribes_cores(graphs, scale):
+    """Core occupancy stays within the machine across every instant —
+    including multi-victim revoke instants (several launches cancelled at
+    once) and migration instants (revoke + relaunch at the same clock)."""
+    machine, pool, jobs = _economics_pool(graphs, scale)
+    res = pool.run()
+    spans = [(r.start, r.finish, r.threads)
+             for recs in res.records.values() for r in recs if not r.hyper]
+    spans += [(p.start, p.finish, p.threads)
+              for precs in res.preempted.values() for p in precs
+              if not p.hyper]
+    for t in sorted({t for s in spans for t in s[:2]}):
+        used = sum(th for s0, s1, th in spans if s0 <= t < s1)
+        assert used <= machine.spec.cores
+
+
+@settings(**DAG_SETTINGS)
+@given(graphs=st.lists(op_graphs(), min_size=2, max_size=3),
+       scale=st.floats(0.1, 1.5))
+def test_economics_service_accounting_sums(graphs, scale):
+    """Charging stays exact under every economics move: service equals
+    completed core-seconds plus revoked partials at the restart-waste
+    rate.  Admission-level eviction appears in NEITHER term — the free
+    move never charges waste."""
+    machine, pool, jobs = _economics_pool(graphs, scale)
+    res = pool.run()
+    eff = machine.spec.hyper_thread_efficiency
+    waste = machine.spec.restart_waste
+    for job in jobs:
+        granted = sum(r.threads * r.duration * (eff if r.hyper else 1.0)
+                      for r in res.records[job.jid])
+        wasted = sum(
+            p.threads * (p.finish - p.start) * (eff if p.hyper else 1.0)
+            * waste for p in res.preempted[job.jid])
+        assert job.service == pytest.approx(granted + wasted, rel=1e-9)
+
+
+@settings(**DAG_SETTINGS)
+@given(graph=op_graphs())
+def test_economics_armed_without_deadlines_matches_corun(graph):
+    """Multi-victim and eviction both require an OVERDUE waiter: with no
+    deadline anywhere a 1-job pool with those knobs armed must still be
+    bit-identical to CorunScheduler on arbitrary DAGs.  Migration is
+    deliberately left off — it prices moves without deadlines by design
+    (its inertness lock is the off-default, see check_parity)."""
+    single = corun_timeline(graph, SimMachine(seed=0))
+    pooled = pool_timeline(
+        graph, SimMachine(seed=0),
+        pool_config=PoolConfig(
+            max_active=1,
+            preemption=PreemptionPolicy(enabled=True, max_victims=4,
+                                        evict_admitted=True)))
+    assert single.makespan == pooled.makespan
+    assert not compare_timelines(timeline_rows(single), timeline_rows(pooled))
+
+
+# ---------------------------------------------------------------------------
 # topology-aware placement invariants (quadrant core booking)
 # ---------------------------------------------------------------------------
 
