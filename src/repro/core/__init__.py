@@ -19,16 +19,19 @@ TPU adaptation (DESIGN.md S2):
   autotune     -- shard-degree hill climbing on compiled roofline cost
 """
 
-from repro.core.graph import Op, OpGraph, GraphBuilder, build_paper_graph, \
-    build_transformer_step_graph, PAPER_INPUT_SIZES
+from repro.core.graph import (
+    CondRegion, DynamicGraphBuilder, DynamicOpGraph, GraphBuilder, Op,
+    OpGraph, RegionEvent, WhileRegion, PAPER_INPUT_SIZES,
+    build_early_exit_wave, build_paper_graph, build_recurrent_step_graph,
+    build_transformer_step_graph, region_exit_op)
 from repro.core.perfmodel import (
     CurveCache, CurveModel, HillClimbProfiler, ProfileStore, RegressionSuite,
     paper_case_lists, power_of_two_cases, REGRESSORS)
 from repro.core.concurrency import ConcurrencyController, ConcurrencyPlan, OpPlan
 from repro.core.planstore import (
     AdaptivePlanStore, CorrectionTable, FrozenPlanStore, OpObservation,
-    PlanStore, FEEDBACK_MODES, OBS_FINISH, OBS_LAUNCH, OBS_REVOKE,
-    critical_path_from, make_plan_store)
+    PlanStore, TripCountEstimator, FEEDBACK_MODES, OBS_FINISH, OBS_LAUNCH,
+    OBS_REVOKE, critical_path_from, make_plan_store)
 from repro.core.strategy import (
     PreemptionPolicy, StrategyAdapter, StrategyConfig, StrategyCore,
     free_cores, pick_admissible, remaining_horizon)
@@ -46,6 +49,9 @@ from repro.core.autotune import (
 __all__ = [
     "Op", "OpGraph", "GraphBuilder", "build_paper_graph",
     "build_transformer_step_graph", "PAPER_INPUT_SIZES",
+    "CondRegion", "DynamicGraphBuilder", "DynamicOpGraph", "RegionEvent",
+    "WhileRegion", "build_early_exit_wave", "build_recurrent_step_graph",
+    "region_exit_op", "TripCountEstimator",
     "CurveCache", "CurveModel", "HillClimbProfiler", "ProfileStore",
     "RegressionSuite",
     "paper_case_lists", "power_of_two_cases", "REGRESSORS",

@@ -172,11 +172,75 @@ class PlanStore(abc.ABC):
     def observe(self, obs: OpObservation) -> None:
         """Report an execution event.  The frozen store discards it."""
 
+    def observe_region(self, region, outcome: float) -> None:
+        """Report a region resolution (observed trip count for a while,
+        1.0/0.0 branch direction for a cond).  Frozen stores discard it;
+        the adaptive store feeds its ``TripCountEstimator``."""
+
     @property
     def adaptive(self) -> bool:
         """True when observations can change future predictions (callers
         that re-derive cached aggregates key off this)."""
         return False
+
+    # ---- region expectations -------------------------------------------
+    # Unresolved regions have no materialized ops to price, so their
+    # contribution to demand/critical-path is an EXPECTATION: expected
+    # remaining trip count x per-iteration body cost for a while region,
+    # probability-weighted branch costs for a cond.  The frozen store
+    # prices from the build-time priors (``est_trips``/``p_true``); the
+    # adaptive store substitutes pool-wide learned estimates.
+
+    def region_trips(self, region) -> float:
+        """Expected TOTAL trip count of a while region (prior-based)."""
+        return min(max(float(region.est_trips), 0.0),
+                   float(region.max_trips))
+
+    def region_taken_p(self, region) -> float:
+        """Probability the cond region takes its true branch."""
+        return min(max(float(region.p_true), 0.0), 1.0)
+
+    def _plan_time(self, op: Op, plan: ConcurrencyPlan) -> float:
+        p = plan.per_instance[op.size_key]
+        return self.predict(op, p.threads, p.variant)
+
+    def _plan_demand(self, body: OpGraph, plan: ConcurrencyPlan) -> float:
+        total = 0.0
+        for op in body.ops.values():
+            p = plan.per_instance[op.size_key]
+            total += self.predict(op, p.threads, p.variant) * p.threads
+        return total
+
+    def _body_tail(self, body: OpGraph, plan: ConcurrencyPlan) -> float:
+        pred = {u: self._plan_time(op, plan) for u, op in body.ops.items()}
+        return max(critical_path_from(body, pred).values(), default=0.0)
+
+    def region_demand(self, region, plan: ConcurrencyPlan) -> float:
+        """Expected outstanding core-seconds of an unresolved region
+        (iterations/branches not yet materialized, plus the exit op)."""
+        p_exit = plan.per_instance[region.exit_op.size_key]
+        exit_d = (self.predict(region.exit_op, p_exit.threads,
+                               p_exit.variant) * p_exit.threads)
+        if region.kind == "cond":
+            p = self.region_taken_p(region)
+            return (p * self._plan_demand(region.branches[0], plan)
+                    + (1.0 - p) * self._plan_demand(region.branches[1], plan)
+                    + exit_d)
+        future = max(self.region_trips(region) - region.trips_started, 0.0)
+        return future * self._plan_demand(region.body, plan) + exit_d
+
+    def region_tail(self, region, plan: ConcurrencyPlan) -> float:
+        """Expected serial time through an unresolved region's not-yet
+        materialized part (iteration critical paths chain; branches are
+        probability-weighted), ending with the exit op."""
+        exit_t = self._plan_time(region.exit_op, plan)
+        if region.kind == "cond":
+            p = self.region_taken_p(region)
+            return (p * self._body_tail(region.branches[0], plan)
+                    + (1.0 - p) * self._body_tail(region.branches[1], plan)
+                    + exit_t)
+        future = max(self.region_trips(region) - region.trips_started, 0.0)
+        return future * self._body_tail(region.body, plan) + exit_t
 
     # ---- aggregate predictions ----------------------------------------
     def remaining_demand(self, graph: OpGraph, plan: ConcurrencyPlan,
@@ -184,13 +248,18 @@ class PlanStore(abc.ABC):
                          ) -> float:
         """Outstanding predicted core-seconds of ``graph`` under the
         frozen plan widths, excluding completed uids — the admission and
-        fair-share currency (``Job.demand``)."""
+        fair-share currency (``Job.demand``).  Unresolved regions add
+        their expected demand (a dynamic graph with zero unresolved
+        regions prices bit-identically to the static graph)."""
         total = 0.0
         for uid, op in graph.ops.items():
             if uid in done:
                 continue
             p = plan.per_instance[op.size_key]
             total += self.predict(op, p.threads, p.variant) * p.threads
+        regions = graph.unresolved_regions()
+        if regions:
+            total += sum(self.region_demand(r, plan) for r in regions)
         return total
 
     def remaining_critical_path(self, graph: OpGraph, plan: ConcurrencyPlan,
@@ -199,7 +268,16 @@ class PlanStore(abc.ABC):
         """uid -> predicted time from starting that node to finishing the
         graph (the node's own re-priced plan prediction plus the longest
         consumer chain; completed nodes contribute zero).  This is what
-        turns a job deadline into per-node slack (``Job.cp``)."""
+        turns a job deadline into per-node slack (``Job.cp``).
+
+        Unresolved regions join the longest-path computation as VIRTUAL
+        nodes: each reserved exit uid gets weight ``region_tail`` (the
+        expected serial time through the unmaterialized part) and a
+        virtual edge from every gate uid, so a node upstream of a
+        half-unrolled loop sees deadline slack through the loop's
+        expected remainder.  The virtual exit entries stay in the
+        returned dict (the pool's root-slack takes a max over values).
+        With zero unresolved regions this is exactly the static path."""
         pred = {}
         for uid, op in graph.ops.items():
             if uid in done:
@@ -207,7 +285,34 @@ class PlanStore(abc.ABC):
             else:
                 p = plan.per_instance[op.size_key]
                 pred[uid] = self.predict(op, p.threads, p.variant)
-        return critical_path_from(graph, pred)
+        regions = graph.unresolved_regions()
+        if not regions:
+            return critical_path_from(graph, pred)
+        tail = {r.exit_uid: self.region_tail(r, plan) for r in regions}
+        extra: dict[int, list[int]] = {}
+        for r in regions:
+            for g in r.gate:
+                extra.setdefault(g, []).append(r.exit_uid)
+
+        def succ(u: int) -> list[int]:
+            return list(graph.consumers(u)) + extra.get(u, [])
+
+        cp: dict[int, float] = {}
+        for root in (*graph.ops, *tail):
+            stack = [root]
+            while stack:
+                u = stack[-1]
+                if u in cp:
+                    stack.pop()
+                    continue
+                pending = [s for s in succ(u) if s not in cp]
+                if pending:
+                    stack.extend(pending)
+                    continue
+                own = tail[u] if u in tail else pred[u]
+                cp[u] = own + max((cp[s] for s in succ(u)), default=0.0)
+                stack.pop()
+        return cp
 
 
 class FrozenPlanStore(PlanStore):
@@ -290,6 +395,37 @@ class CorrectionTable:
         }
 
 
+@dataclasses.dataclass
+class TripCountEstimator:
+    """Pool-wide EWMA over observed region outcomes, keyed by region key
+    (the ``CorrectionTable`` pattern applied to control flow): while
+    regions blend observed trip counts, cond regions blend taken
+    fractions (resolutions arrive as 1.0/0.0, so the EWMA converges on
+    the empirical taken probability).  One estimator backs every
+    adaptive store in a pool, so the second tenant running the same loop
+    starts with the learned trip count instead of the build-time prior.
+
+    The first observation for a key initializes the estimate directly
+    (the build-time prior is a guess, not evidence — don't average
+    against it); later observations blend incrementally."""
+
+    alpha: float = 0.5
+    values: dict[Hashable, float] = dataclasses.field(default_factory=dict)
+    observed: int = 0
+
+    def update(self, key: Hashable, outcome: float) -> None:
+        old = self.values.get(key)
+        self.values[key] = (outcome if old is None
+                            else old + self.alpha * (outcome - old))
+        self.observed += 1
+
+    def estimate(self, key: Hashable, prior: float) -> float:
+        return self.values.get(key, prior)
+
+    def stats(self) -> dict[str, float]:
+        return {"observed": self.observed, "keys": len(self.values)}
+
+
 class AdaptivePlanStore(PlanStore):
     """``feedback="ewma"``: frozen curves, online corrections.
 
@@ -308,14 +444,29 @@ class AdaptivePlanStore(PlanStore):
     bit-identical to ``FrozenPlanStore`` (the parity lock)."""
 
     def __init__(self, controller: ConcurrencyController,
-                 corrections: CorrectionTable | None = None):
+                 corrections: CorrectionTable | None = None,
+                 trip_counts: TripCountEstimator | None = None):
         self.controller = controller
         self.corrections = (corrections if corrections is not None
                             else CorrectionTable())
+        self.trip_counts = (trip_counts if trip_counts is not None
+                            else TripCountEstimator())
 
     @property
     def adaptive(self) -> bool:
         return True
+
+    # region expectations use the learned estimates instead of the priors
+    def region_trips(self, region) -> float:
+        est = self.trip_counts.estimate(region.key, float(region.est_trips))
+        return min(max(est, 0.0), float(region.max_trips))
+
+    def region_taken_p(self, region) -> float:
+        p = self.trip_counts.estimate(region.key, float(region.p_true))
+        return min(max(p, 0.0), 1.0)
+
+    def observe_region(self, region, outcome: float) -> None:
+        self.trip_counts.update(region.key, float(outcome))
 
     def predict(self, op: Op, threads: int, variant: bool) -> float:
         base = self.controller.store.curve(op).predict(threads, variant)
@@ -363,13 +514,15 @@ class AdaptivePlanStore(PlanStore):
 
 
 def make_plan_store(feedback: str, controller: ConcurrencyController, *,
-                    corrections: CorrectionTable | None = None) -> PlanStore:
+                    corrections: CorrectionTable | None = None,
+                    trip_counts: TripCountEstimator | None = None
+                    ) -> PlanStore:
     """The one constructor every runtime/pool uses, so the gating knob
     (``StrategyConfig.feedback``) has a single interpretation."""
     if feedback == "off":
         return FrozenPlanStore(controller)
     if feedback == "ewma":
-        return AdaptivePlanStore(controller, corrections)
+        return AdaptivePlanStore(controller, corrections, trip_counts)
     raise ValueError(
         f"unknown feedback mode {feedback!r}; expected one of "
         f"{FEEDBACK_MODES}")

@@ -129,12 +129,18 @@ class ConcurrencyRuntime:
             case_lists=paper_case_lists(self.machine.spec.cores,
                                         self.machine.spec.tiles),
             interval=self.config.interval)
-        self.store = profiler.profile_graph(graph, cache=self.plan_cache)
+        # dynamic graphs are profiled/planned through their static
+        # profile_view — one clone of every op a region could ever
+        # materialize, so the frozen plan covers loop bodies and branches
+        # before the first iteration exists (a static graph is its own
+        # view: bit-identical to profiling the graph directly)
+        view = graph.profile_view()
+        self.store = profiler.profile_graph(view, cache=self.plan_cache)
         self.controller = ConcurrencyController(
             self.store, max_deviation=self.config.max_deviation,
             default_threads=self.machine.spec.cores,
             interval=self.config.interval)
-        self.plan = self.controller.build_plan(graph)
+        self.plan = self.controller.build_plan(view)
         self.planstore = make_plan_store(self.config.feedback,
                                          self.controller)
         return self.store

@@ -48,7 +48,8 @@ from repro.core.simmachine import Placement, SimMachine
 from repro.core.strategy import (ScheduledOp, ScheduleResult, StrategyAdapter,
                                  StrategyConfig, StrategyCore, free_cores,
                                  pick_admissible, remaining_horizon)
-from repro.obs.trace import (FAM_PLANSTORE, NULL_SINK, TraceEvent, TraceSink)
+from repro.obs.trace import (FAM_PLANSTORE, FAM_REGION, NULL_SINK, TraceEvent,
+                             TraceSink)
 
 __all__ = [
     "CorunScheduler", "ScheduledOp", "ScheduleResult", "free_cores",
@@ -68,10 +69,14 @@ class _EventSim:
 
     def __init__(self, graph: OpGraph):
         self.graph = graph
+        # restore dynamic graphs to their initial shape; entry-free
+        # regions expand immediately (no-op [] on static graphs)
+        self.region_events = list(graph.reset())
         self.pending = {u: len(op.deps) for u, op in graph.ops.items()}
         self.ready: deque[int] = deque(sorted(graph.sources()))
         self.heap: list[tuple[float, int, int]] = []   # (finish, seq, uid)
         self.running: dict[int, ScheduledOp] = {}
+        self.completed: set[int] = set()
         self.clock = 0.0
         self.records: list[ScheduledOp] = []
         self.events: list[tuple[float, int]] = []
@@ -87,12 +92,28 @@ class _EventSim:
         self.clock = finish
         sched = self.running.pop(uid)
         self.records.append(sched)
+        self.completed.add(uid)
         for c in self.graph.consumers(uid):
             self.pending[c] -= 1
             if self.pending[c] == 0:
                 self.ready.append(c)
+        # dynamic graphs may materialize ops at this instant (next loop
+        # iteration, taken branch, region exit); absorb them into the
+        # frontier — their gate deps are already complete, so consumer
+        # decrements will never arrive for those edges
+        for ev in self.graph.advance(uid, self.completed):
+            self.region_events.append(ev)
+            self._absorb(ev.new_uids)
         self.events.append((self.clock, len(self.running)))
         return sched
+
+    def _absorb(self, new_uids) -> None:
+        for u in new_uids:
+            op = self.graph.ops[u]
+            n = sum(1 for d in op.deps if d not in self.completed)
+            self.pending[u] = n
+            if n == 0:
+                self.ready.append(u)
 
     @property
     def done(self) -> bool:
@@ -238,6 +259,26 @@ class CorunScheduler:
                              sink=self.core.sink)
 
     # ------------------------------------------------------------------
+    def _drain_region_events(self, sim: _EventSim,
+                             adapter: _GraphAdapter) -> None:
+        """Report region shape changes: resolutions feed the store's
+        trip-count learning; every event traces under FAM_REGION."""
+        while sim.region_events:
+            ev = sim.region_events.pop(0)
+            if ev.kind == "resolve" and ev.outcome is not None:
+                adapter.store.observe_region(ev.region, ev.outcome)
+            if self.core.sink.enabled:
+                self.core.sink.emit(TraceEvent(
+                    ts=sim.clock, family=FAM_REGION, kind=ev.kind,
+                    key=ev.region.rid,
+                    data={"region": ev.region.kind,
+                          "region_key": str(ev.region.key),
+                          "new_ops": len(ev.new_uids),
+                          **({"outcome": ev.outcome}
+                             if ev.outcome is not None else {}),
+                          **({"trips": ev.region.trips_started}
+                             if ev.region.kind == "while" else {})}))
+
     def run(self, graph: OpGraph) -> ScheduleResult:
         sim = _EventSim(graph)
         adapter = self.adapter(sim)
@@ -245,6 +286,7 @@ class CorunScheduler:
         # recorded now take effect on the NEXT run (paper §III-D: avoid
         # recorded pairs "in the future training steps")
         self.core.begin_run()
+        self._drain_region_events(sim, adapter)
         while not sim.done:
             self.core.drain(adapter)
             if sim.running:
@@ -253,6 +295,7 @@ class CorunScheduler:
                 # back into the plan store (no-op under feedback="off")
                 adapter.observe(sched.op.uid, sched, OBS_FINISH,
                                 sched.duration)
+                self._drain_region_events(sim, adapter)
         return ScheduleResult(makespan=sim.clock, records=sim.records,
                               events=sim.events)
 

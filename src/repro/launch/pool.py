@@ -25,6 +25,17 @@ Observability knobs: ``--trace-out trace.json`` records every scheduling
 decision (see ``repro.obs.trace``) and writes the run as a Chrome-trace/
 Perfetto JSON timeline — open it at https://ui.perfetto.dev;
 ``--log-level`` configures the shared ``repro`` logger.
+
+Dynamic control flow: ``--dynamic`` switches the tenant mix to dynamic
+graphs — ``--jobs`` entries become ``rnn`` (data-dependent while loop,
+``repro.core.graph.build_recurrent_step_graph``) and ``wave``
+(early-exit serving pipeline, ``build_early_exit_wave``) instead of
+paper models.  Region expansion and resolution instants land in the
+decision-event stream, so ``--dynamic --trace-out trace.json`` shows
+every loop iteration materializing on the Perfetto timeline.
+``--trip-count-feedback`` arms the pool-wide EWMA trip-count estimator
+(implies ``--feedback ewma``): unresolved loops are priced at learned
+trip counts instead of their build-time priors.
 """
 
 from __future__ import annotations
@@ -34,6 +45,8 @@ import json
 import pathlib
 
 from repro.core import SimMachine, build_paper_graph
+from repro.core.graph import (OpGraph, build_early_exit_wave,
+                              build_recurrent_step_graph)
 from repro.multitenant import (PlanCache, PoolConfig, PreemptionPolicy,
                                RuntimePool)
 from repro.obs import (RecordingSink, configure_logging, export_pool_trace,
@@ -42,10 +55,25 @@ from repro.obs import (RecordingSink, configure_logging, export_pool_trace,
 logger = get_logger(__name__)
 
 
+def _dynamic_graph(kind: str, i: int) -> OpGraph:
+    """One dynamic-mix tenant: trips/depths vary with the job index so a
+    ``--trip-count-feedback`` run has a distribution to learn."""
+    if kind == "rnn":
+        return build_recurrent_step_graph(trips=4 + (i % 3), max_trips=8,
+                                          name=f"rnn{i}")
+    if kind == "wave":
+        return build_early_exit_wave(depth=1 + (i % 3), max_depth=6,
+                                     accept=(i % 2 == 0), name=f"wave{i}")
+    raise SystemExit(f"--dynamic jobs must be rnn|wave, got {kind!r}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--jobs", default="resnet50,dcgan,resnet50,dcgan",
-                    help="comma-separated paper models, one job each")
+    ap.add_argument("--jobs", default=None,
+                    help="comma-separated paper models, one job each "
+                         "(with --dynamic: rnn|wave entries instead; "
+                         "default resnet50,dcgan,resnet50,dcgan or "
+                         "rnn,wave,rnn,wave)")
     ap.add_argument("--priorities", default=None,
                     help="comma-separated weights (default: all 1.0)")
     ap.add_argument("--max-active", type=int, default=3)
@@ -88,6 +116,17 @@ def main() -> None:
                          "(empty quadrant first, quadrant-local packing, "
                          "bounded spill) with per-quadrant bandwidth "
                          "contention and tenant-to-quadrant affinity")
+    ap.add_argument("--dynamic", action="store_true",
+                    help="tenant mix of DYNAMIC graphs (data-dependent "
+                         "while loops + early-exit branches): --jobs "
+                         "entries become rnn|wave; region expansion and "
+                         "resolution instants appear in --trace-out "
+                         "timelines as decision events")
+    ap.add_argument("--trip-count-feedback", action="store_true",
+                    help="arm the pool-wide EWMA trip-count estimator "
+                         "(implies --feedback ewma): unresolved regions "
+                         "are priced at learned trip counts instead of "
+                         "build-time priors")
     ap.add_argument("--feedback", choices=("off", "ewma"), default="off",
                     help="closed-loop plan store: 'off' freezes every "
                          "prediction at profiling time (bit-for-bit the "
@@ -118,8 +157,12 @@ def main() -> None:
                     help="level for the shared 'repro' logger")
     args = ap.parse_args()
     configure_logging(args.log_level)
+    if args.trip_count_feedback:
+        args.feedback = "ewma"
 
-    models = [m.strip() for m in args.jobs.split(",") if m.strip()]
+    jobs = args.jobs or ("rnn,wave,rnn,wave" if args.dynamic
+                         else "resnet50,dcgan,resnet50,dcgan")
+    models = [m.strip() for m in jobs.split(",") if m.strip()]
     if not models:
         raise SystemExit("--jobs must name at least one model")
     prios = ([float(p) for p in args.priorities.split(",")]
@@ -135,6 +178,12 @@ def main() -> None:
 
     parity = None
     if args.check_parity:
+        if args.dynamic:
+            # check_parity covers the dynamic machinery via its
+            # zero-region legs on the paper zoo; a mix of genuinely
+            # dynamic graphs has no single-graph golden to diff against
+            raise SystemExit("--check-parity runs on the paper-model "
+                             "mix; drop --dynamic for the preflight")
         from repro.multitenant import check_parity
         report = check_parity(models, seed=args.seed, scale=args.scale)
         if not report["ok"]:
@@ -168,8 +217,9 @@ def main() -> None:
                     or args.evict_admitted or args.migrate) else None)))
     for i, (model, prio, budget) in enumerate(zip(models, prios, budgets)):
         submit_time = i * args.arrival_gap
-        pool.submit(build_paper_graph(model, scale=args.scale),
-                    priority=prio, name=f"{model}-{i}",
+        graph = (_dynamic_graph(model, i) if args.dynamic
+                 else build_paper_graph(model, scale=args.scale))
+        pool.submit(graph, priority=prio, name=f"{model}-{i}",
                     submit_time=submit_time,
                     deadline=(submit_time + budget
                               if budget is not None else None))
@@ -223,6 +273,15 @@ def main() -> None:
         "preemptions": res.n_preemptions,
         "evictions": res.n_evictions,
         "migrations": res.n_migrations,
+        **({"region_expands": res.n_region_expands,
+            "region_resolves": res.n_region_resolves}
+           if args.dynamic else {}),
+        **({"trip_counts": {str(k): v for k, v
+                            in sorted(pool.trip_counts.values.items(),
+                                      key=str)},
+            "trip_count_stats": pool.trip_counts.stats()}
+           if args.trip_count_feedback and pool.trip_counts is not None
+           else {}),
         "feedback": args.feedback,
         **({"feedback_stats": res.feedback_stats}
            if res.feedback_stats is not None else {}),

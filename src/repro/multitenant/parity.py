@@ -38,7 +38,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable
 
-from repro.core.graph import OpGraph, build_paper_graph
+from repro.core.graph import DynamicOpGraph, OpGraph, build_paper_graph
 from repro.core.runtime import ConcurrencyRuntime, RuntimeConfig
 from repro.core.simmachine import SimMachine
 from repro.core.strategy import PreemptionPolicy, ScheduleResult
@@ -130,7 +130,7 @@ def check_parity(models: Iterable[str] = ("resnet50", "dcgan"), *,
     """Pool-vs-corun parity over paper-zoo models, plus the closed-loop
     zero-error leg and the trace-inertness leg.
 
-    Per model, FIVE pool/corun timelines must agree bitwise with the
+    Per model, SEVEN pool/corun timelines must agree bitwise with the
     single-graph ``feedback="off"`` reference: the single-job pool (the
     strategy-core differential), a single-job pool with a live
     ``RecordingSink`` (the observability lock — tracing must be
@@ -138,9 +138,12 @@ def check_parity(models: Iterable[str] = ("resnet50", "dcgan"), *,
     itself flagged, so the leg can't pass vacuously with a disconnected
     sink), a preemption-ENABLED pool with the economics knobs at their
     off defaults and no deadlines (the preemption-economics surface must
-    be inert unless armed AND triggered), and both schedulers re-run
-    with ``feedback="ewma"`` on a zero-error observation stream (the
-    blend-math lock — an exact observation may not move any prediction).
+    be inert unless armed AND triggered), both schedulers re-run with
+    ``feedback="ewma"`` on a zero-error observation stream (the
+    blend-math lock — an exact observation may not move any prediction),
+    and both schedulers run on the same ops wrapped in a
+    ``DynamicOpGraph`` with ZERO regions (the dynamic-control-flow lock —
+    the region machinery must be bit-for-bit inert on static graphs).
 
     Returns ``{"ok": bool, "models": {name: {"ok", "makespan",
     "divergences"}}}``.  Uses equal-seeded machines (the sim machine is a
@@ -153,6 +156,9 @@ def check_parity(models: Iterable[str] = ("resnet50", "dcgan"), *,
     fb = dataclasses.replace(base, feedback="ewma")
     for model in dict.fromkeys(models):        # dedupe, keep order
         graph = build_paper_graph(model, scale=scale)
+        # the same ops as a region-free dynamic graph: the trivial fixed
+        # point of the frontier contract, must schedule bit-identically
+        dyn = DynamicOpGraph(name=graph.name, ops=dict(graph.ops))
         single = corun_timeline(graph, SimMachine(seed=seed), config)
         ref = timeline_rows(single)
         sink = RecordingSink()
@@ -174,6 +180,9 @@ def check_parity(models: Iterable[str] = ("resnet50", "dcgan"), *,
                                           fb, zero_error=True),
             "pool-ewma0": pool_timeline(graph, SimMachine(seed=seed), fb,
                                         zero_error=True),
+            "corun-dyn0": corun_timeline(dyn, SimMachine(seed=seed),
+                                         config),
+            "pool-dyn0": pool_timeline(dyn, SimMachine(seed=seed), config),
         }
         divs: list[str] = []
         if not sink.events:

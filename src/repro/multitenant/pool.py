@@ -59,14 +59,16 @@ import itertools
 from typing import Mapping, Sequence
 
 from repro.core.concurrency import OpPlan
-from repro.core.graph import Op, OpGraph
+from repro.core.graph import Op, OpGraph, RegionEvent
 from repro.core.interference import InterferenceRecorder
 from repro.core.perfmodel import cross_graph_key
 from repro.core.planstore import (OBS_FINISH, OBS_REVOKE, CorrectionTable,
-                                  OpObservation, make_plan_store)
+                                  OpObservation, TripCountEstimator,
+                                  make_plan_store)
 from repro.obs.metrics import pool_metrics
 from repro.obs.trace import (FAM_ADMISSION, FAM_PLANSTORE, FAM_PREEMPTION,
-                             FAM_STRATEGY, NULL_SINK, TraceEvent, TraceSink)
+                             FAM_REGION, FAM_STRATEGY, NULL_SINK, TraceEvent,
+                             TraceSink)
 from repro.core.runtime import ConcurrencyRuntime, RuntimeConfig
 from repro.core.simmachine import SimMachine
 from repro.core.strategy import (PreemptionPolicy, ScheduledOp,
@@ -152,6 +154,10 @@ class _PoolSim:
         # invariants keep holding on the completed timeline
         self.preempted: dict[int, list[ScheduledOp]] = {}
         self.events: list[tuple[float, int]] = []
+        # (jid, RegionEvent) shape changes not yet reported to the pool
+        # driver (which traces them, feeds trip-count learning, and
+        # re-prices the job); empty for every static graph
+        self.region_events: list[tuple[int, RegionEvent]] = []
         self._seq = itertools.count()
         self._live_seq: dict[NodeKey, int] = {}     # key -> heap entry seq
         self._cancelled: set[int] = set()           # revoked heap seqs
@@ -160,6 +166,11 @@ class _PoolSim:
         g = job.graph
         self.graphs[job.jid] = g
         self.jobs[job.jid] = job
+        # restore dynamic graphs to their initial shape (entry-free
+        # regions expand now, BEFORE the frontier is derived); a no-op []
+        # on static graphs
+        for ev in g.reset():
+            self.region_events.append((job.jid, ev))
         self.pending[job.jid] = {u: len(op.deps) for u, op in g.ops.items()}
         self.ready[job.jid] = sorted(g.sources())
         self.records[job.jid] = []
@@ -221,6 +232,19 @@ class _PoolSim:
             self.pending[jid][c] -= 1
             if self.pending[jid][c] == 0:
                 self.ready[jid].append(c)
+        # dynamic graphs may materialize ops at this instant (next loop
+        # iteration, taken branch, region exit); absorb them into the
+        # job's frontier — their gate deps are already complete, so no
+        # consumer decrement will ever arrive for those edges
+        for ev in self.graphs[jid].advance(uid, self.completed[jid]):
+            self.region_events.append((jid, ev))
+            for u in ev.new_uids:
+                op = self.graphs[jid].ops[u]
+                n = sum(1 for d in op.deps
+                        if d not in self.completed[jid])
+                self.pending[jid][u] = n
+                if n == 0:
+                    self.ready[jid].append(u)
         self.events.append((self.clock, len(self.running)))
         return jid, sched
 
@@ -246,6 +270,10 @@ class PoolResult:
     # CorrectionTable.stats() of the pool's shared EWMA state (None when
     # the pool ran with feedback="off")
     feedback_stats: dict[str, float] | None = None
+    # dynamic-control-flow shape changes during the run (0 on every
+    # static mix): while-iterations materialized / regions resolved
+    n_region_expands: int = 0
+    n_region_resolves: int = 0
     # flat metric snapshot of the run (repro.obs.metrics.pool_metrics):
     # the one accounting surface benches/CLI consume instead of each
     # re-deriving its own sums from records
@@ -595,7 +623,15 @@ class RuntimePool:
         self._preemption = strat.preemption
         self.corrections = (CorrectionTable()
                             if self.feedback != "off" else None)
-        self._refreshed_at = 0      # corrections.observed at last refresh
+        # ONE trip-count estimator spans every tenant too (keyed by
+        # region key): the second tenant running the same loop starts
+        # with the learned trip count instead of its build-time prior
+        self.trip_counts = (TripCountEstimator()
+                            if self.feedback != "off" else None)
+        # (corrections.observed, trip_counts.observed) at last refresh
+        self._refreshed_at = (0, 0)
+        # region shape-change counters of the CURRENT run (reset by run())
+        self._region_counts = {"expand": 0, "resolve": 0}
         self.jobs: list[Job] = []
         self._jid = itertools.count()
 
@@ -614,7 +650,8 @@ class RuntimePool:
         # the job's closed-loop plan store: frozen curves under
         # feedback="off", the pool-wide EWMA corrections under "ewma"
         job.store = make_plan_store(self.feedback, rt.controller,
-                                    corrections=self.corrections)
+                                    corrections=self.corrections,
+                                    trip_counts=self.trip_counts)
         # predicted demand in core-seconds — the admission/fair-share
         # currency — and the per-node remaining-work estimate that prices
         # deadline slack, both DERIVED from the store (so a warm
@@ -660,12 +697,16 @@ class RuntimePool:
         ops complete.)  A no-op with feedback off or nothing observed
         yet, so the default pool is bit-for-bit unchanged; skipped when
         no NEW observation landed since the last refresh (a waiting job's
-        estimates can only change through the correction table)."""
-        if self.corrections is None or not self.corrections.observed:
+        estimates can only change through the correction table or —
+        since regions resolve at runtime — the trip-count estimator, so
+        region-resolution instants count as observations here too)."""
+        if self.corrections is None:
             return
-        if self.corrections.observed == self._refreshed_at:
+        stamp = (self.corrections.observed,
+                 self.trip_counts.observed if self.trip_counts else 0)
+        if stamp == (0, 0) or stamp == self._refreshed_at:
             return
-        self._refreshed_at = self.corrections.observed
+        self._refreshed_at = stamp
         for job in self.queue.waiting_jobs():
             if job.store is not None and job.plan is not None:
                 job.demand = job.store.remaining_demand(job.graph, job.plan)
@@ -734,6 +775,44 @@ class RuntimePool:
             return True
         return False
 
+    # ---- dynamic control flow -------------------------------------------
+    def _handle_region_events(self, sim: _PoolSim) -> None:
+        """Drain the sim's pending region shape changes: trace each one
+        (FAM_REGION), feed resolutions into the store's trip-count
+        learning, and re-derive the affected job's ``demand``/``cp`` from
+        its NEW shape — a loop exiting early frees reserved demand (the
+        next ``_admit`` can wake blocked arrivals), a loop overrunning
+        its estimate shrinks slack (the next slack-expiry wakeup can
+        trigger the priced preemption/eviction moves).  Re-derivation
+        runs for frozen stores too: the shape changed even if no
+        prediction did.  A no-op on every static mix."""
+        while sim.region_events:
+            jid, ev = sim.region_events.pop(0)
+            self._region_counts[ev.kind] += 1
+            job = sim.jobs.get(jid)
+            if job is None:
+                continue
+            if (ev.kind == "resolve" and ev.outcome is not None
+                    and job.store is not None):
+                job.store.observe_region(ev.region, ev.outcome)
+            if self.sink.enabled:
+                self.sink.emit(TraceEvent(
+                    ts=sim.clock, family=FAM_REGION, kind=ev.kind,
+                    key=(jid, ev.region.rid),
+                    data={"job": job.name, "region": ev.region.kind,
+                          "region_key": str(ev.region.key),
+                          "new_ops": len(ev.new_uids),
+                          **({"outcome": ev.outcome}
+                             if ev.outcome is not None else {}),
+                          **({"trips": ev.region.trips_started}
+                             if ev.region.kind == "while" else {})}))
+            if job.store is not None and job.plan is not None:
+                done = sim.completed.get(jid, set())
+                job.demand = job.store.remaining_demand(
+                    job.graph, job.plan, done)
+                job.cp = job.store.remaining_critical_path(
+                    job.graph, job.plan, done)
+
     def _admit(self, sim: _PoolSim, active: list[Job]) -> None:
         self._refresh_waiting_estimates()
         traced = self.sink.enabled
@@ -771,6 +850,9 @@ class RuntimePool:
                           "n_active": len(active),
                           "outstanding": sum(j.demand for j in active)}))
             sim.admit(job)
+            # entry-free regions expanded during admit: trace them and
+            # re-price the job off its materialized shape
+            self._handle_region_events(sim)
             if not sim.ready[job.jid]:      # zero-op graph: done on arrival
                 job.finish_time = sim.clock
                 continue
@@ -806,6 +888,26 @@ class RuntimePool:
                     expiry = t
         return expiry
 
+    def _next_decision_instant(self, sim: _PoolSim, active: list[Job],
+                               horizon: float) -> float | None:
+        """Earliest scheduling instant strictly before ``horizon`` (the
+        next live completion): the next ADMISSIBLE arrival (an arrival
+        the admission tier would bounce is not a decision) and — when
+        preemption is armed — the next slack expiry, folded into ONE
+        min so no wakeup source can mask an earlier one.  Returns None
+        when the next completion is the next decision."""
+        wake = None
+        if len(self.queue):
+            arr = self.queue.next_admissible_arrival(active, sim.clock)
+            if arr is not None and arr < horizon:
+                wake = arr
+        if self._preemption.enabled:
+            exp = self._next_slack_expiry(sim)
+            if (exp is not None and exp < horizon
+                    and (wake is None or exp < wake)):
+                wake = exp
+        return wake
+
     def run(self) -> PoolResult:
         sim = _PoolSim()
         active: list[Job] = []
@@ -815,7 +917,7 @@ class RuntimePool:
         # comparisons stay apples-to-apples)
         adapter = self.scheduler.adapter(sim)
         core = self.scheduler.core
-        preempting = core.config.preemption.enabled
+        self._region_counts = {"expand": 0, "resolve": 0}
         # freeze the cross-job interference blacklist for this pool run
         # (pairs recorded during the run bite on the next one)
         core.begin_run()
@@ -840,19 +942,9 @@ class RuntimePool:
                 # instant (it used to wake on max_active alone), but a
                 # LATER admissible arrival behind it still gets its own
                 # instant (next_admissible_arrival scans past the blocked
-                # one).
-                wake = None
-                if len(self.queue):
-                    arr = self.queue.next_admissible_arrival(
-                        active, sim.clock)
-                    if arr is not None and arr < nxt_fin:
-                        wake = arr
-                if preempting:
-                    # also wake when an admitted tenant runs out of slack
-                    exp = self._next_slack_expiry(sim)
-                    if (exp is not None and exp < nxt_fin
-                            and (wake is None or exp < wake)):
-                        wake = exp
+                # one).  Slack expiries (preemption armed) fold into the
+                # same min — see _next_decision_instant.
+                wake = self._next_decision_instant(sim, active, nxt_fin)
                 if wake is not None:
                     sim.clock = wake
                     self._admit(sim, active)
@@ -865,6 +957,12 @@ class RuntimePool:
                 # admission check below sees the tightened values)
                 adapter.observe((jid, sched.op.uid), sched, OBS_FINISH,
                                 sched.duration)
+                # region shape changes at this completion: trace, learn
+                # trip counts, re-price the job's demand/slack (early
+                # exit frees demand -> the _admit below can wake blocked
+                # arrivals; overrun shrinks slack -> the next decision
+                # instant can trigger preemption/eviction)
+                self._handle_region_events(sim)
                 job = next(j for j in active if j.jid == jid)
                 job.ops_done += 1
                 if sim.job_done(jid):
@@ -876,7 +974,9 @@ class RuntimePool:
                             cache_stats=self.plan_cache.stats(),
                             preempted=sim.preempted,
                             feedback_stats=(self.corrections.stats()
-                                            if self.corrections else None))
+                                            if self.corrections else None),
+                            n_region_expands=self._region_counts["expand"],
+                            n_region_resolves=self._region_counts["resolve"])
         # the standard metric snapshot rides on EVERY result (tracing not
         # required): benches and the CLI read one accounting surface
         result.metrics = pool_metrics(

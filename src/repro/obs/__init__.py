@@ -1,7 +1,7 @@
 """Observability: decision tracing, metrics, timeline export, logging.
 
 The telemetry subsystem every scheduling layer emits into — see
-``repro.obs.trace`` for the ``TraceSink`` seam and the five decision-event
+``repro.obs.trace`` for the ``TraceSink`` seam and the six decision-event
 families, ``repro.obs.metrics`` for the registry, ``repro.obs.perfetto``
 for Chrome-trace/Perfetto export, ``repro.obs.log`` for the shared
 ``repro`` logger.  This package never imports the schedulers (they import
@@ -14,13 +14,14 @@ from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                slowdown_metrics)
 from repro.obs.perfetto import export_pool_trace, pool_trace, write_trace
 from repro.obs.trace import (FAM_ADMISSION, FAM_PLACEMENT, FAM_PLANSTORE,
-                             FAM_PREEMPTION, FAM_STRATEGY, FAMILIES,
+                             FAM_PREEMPTION, FAM_REGION, FAM_STRATEGY, FAMILIES,
                              NULL_SINK, NullSink, RecordingSink, TraceEvent,
                              TraceSink)
 
 __all__ = [
     "FAM_ADMISSION", "FAM_PLACEMENT", "FAM_PLANSTORE", "FAM_PREEMPTION",
-    "FAM_STRATEGY", "FAMILIES", "NULL_SINK", "NullSink", "RecordingSink",
+    "FAM_REGION", "FAM_STRATEGY", "FAMILIES", "NULL_SINK", "NullSink",
+    "RecordingSink",
     "TraceEvent", "TraceSink",
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "metrics_from_events", "pool_metrics", "slowdown_metrics",

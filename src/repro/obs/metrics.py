@@ -32,7 +32,8 @@ import math
 from typing import Iterable
 
 from repro.obs.trace import (FAM_ADMISSION, FAM_PLACEMENT, FAM_PLANSTORE,
-                             FAM_PREEMPTION, FAM_STRATEGY, TraceEvent)
+                             FAM_PREEMPTION, FAM_REGION, FAM_STRATEGY,
+                             TraceEvent)
 
 
 def _jain(values: list[float]) -> float:
@@ -163,6 +164,14 @@ def pool_metrics(result, *, spec=None, cache_stats=None,
         sum(getattr(j, "evictions", 0) for j in result.jobs))
     reg.counter("pool.migrations").inc(
         sum(getattr(j, "migrations", 0) for j in result.jobs))
+    # dynamic control flow (0 on static mixes; counters only materialize
+    # when a region actually stepped, so static snapshots are unchanged)
+    n_exp = getattr(result, "n_region_expands", 0)
+    if n_exp:
+        reg.counter("region.expand").inc(n_exp)
+    n_res = getattr(result, "n_region_resolves", 0)
+    if n_res:
+        reg.counter("region.resolve").inc(n_res)
     service = 0.0
     shares = []
     for j in result.jobs:
@@ -289,6 +298,19 @@ def metrics_from_events(events: Iterable[TraceEvent]) -> MetricsRegistry:
                 reg.counter("placement.avoid_overrides").inc()
         elif e.family == FAM_PREEMPTION:
             reg.counter(f"preemption.{e.kind}").inc()
+            # re-derive the economics counters PoolResult keeps:
+            # "revoke" fires once per revoked victim and "migrate" revokes
+            # its launch at the sim level WITHOUT a "revoke" event, so
+            # both count as preempted partials; "multi_revoke" is the
+            # per-set summary (already counted victim-by-victim)
+            if e.kind in ("revoke", "migrate"):
+                reg.counter("pool.preemptions").inc()
+            if e.kind == "evict":
+                reg.counter("pool.evictions").inc()
+            if e.kind == "migrate":
+                reg.counter("pool.migrations").inc()
+        elif e.family == FAM_REGION:
+            reg.counter(f"region.{e.kind}").inc()
         elif e.family == FAM_PLANSTORE:
             if e.kind == "profile":
                 reg.counter("cache.probes_spent").inc(e.data["probes"])

@@ -48,9 +48,10 @@ FAM_STRATEGY = "strategy"
 FAM_PLACEMENT = "placement"
 FAM_PREEMPTION = "preemption"
 FAM_PLANSTORE = "planstore"
+FAM_REGION = "region"       # dynamic control flow: expand/resolve instants
 
 FAMILIES = (FAM_ADMISSION, FAM_STRATEGY, FAM_PLACEMENT, FAM_PREEMPTION,
-            FAM_PLANSTORE)
+            FAM_PLANSTORE, FAM_REGION)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,522 @@
+"""Dynamic control flow: lazily-unrolled while regions, probabilistic cond
+regions, expectation pricing, trip-count learning, and the static-parity
+lock.
+
+The locks this file owns:
+
+* **Schedule invariants over random dynamic DAGs** — deterministic twins
+  of the hypothesis properties (hypothesis is absent in-container): for
+  seeded random graphs with random while/cond regions and random resolved
+  trip counts, every materialized op completes exactly once, dependencies
+  are respected, cores are never oversubscribed at any instant, and every
+  region resolves by the end of the run.
+* **Zero-unresolved == static, bitwise** — a ``DynamicOpGraph`` with no
+  regions must reproduce the plain ``OpGraph`` timeline bit-for-bit (the
+  check_parity ``corun-dyn0``/``pool-dyn0`` legs cover the zoo; here the
+  same property on random DAGs).
+* **Expectation pricing** — ``remaining_demand``/``remaining_critical_path``
+  price unresolved regions as expectations (trip prior x body cost), fall
+  monotonically as iterations materialize, and collapse to the static sums
+  once every region resolves.
+* **Trip-count learning** — ``TripCountEstimator`` EWMA semantics, and the
+  pool-wide sharing that lets a second tenant running the same loop start
+  from the observed count instead of the prior.
+* **Events-only accounting** (satellite) — ``metrics_from_events`` agrees
+  with the ``PoolResult`` counters for the PR-7 economics kinds
+  (``multi_revoke``/``evict``/``migrate``) on armed mixes, and for the
+  region counters on a dynamic mix.
+* **Decision-instant dedupe** (satellite) — an arrival scheduled after a
+  slack expiry must not mask the expiry (``_next_decision_instant``).
+"""
+
+import random
+
+import pytest
+
+from repro.core import (ConcurrencyRuntime, GraphBuilder, PreemptionPolicy,
+                        RuntimeConfig, SimMachine)
+from repro.core.graph import (DynamicGraphBuilder, DynamicOpGraph,
+                              build_early_exit_wave,
+                              build_recurrent_step_graph)
+from repro.core.planstore import TripCountEstimator
+from repro.multitenant import (PoolConfig, RuntimePool, compare_timelines,
+                               corun_timeline, timeline_rows)
+from repro.obs import FAM_REGION, FAMILIES, RecordingSink, metrics_from_events
+
+
+@pytest.fixture(scope="module")
+def machine():
+    return SimMachine()
+
+
+# ---------------------------------------------------------------------------
+# random dynamic DAGs (seeded: deterministic twins of the hypothesis style)
+# ---------------------------------------------------------------------------
+
+_CLASSES = {
+    # op_class: (flops_per_elem, bytes_per_elem, parallel_fraction)
+    "DynMatMul": (160.0, 16.0, 0.96),
+    "DynConv": (90.0, 24.0, 0.92),
+    "DynNorm": (6.0, 32.0, 0.75),
+    "DynAct": (2.0, 24.0, 0.6),
+}
+_SHAPES = [(32, 8, 64), (16, 16, 32), (8, 8, 128)]
+
+
+def _elems(shape):
+    n = 1.0
+    for d in shape:
+        n *= d
+    return n
+
+
+def _add_rand_op(b, rng, deps):
+    cls = rng.choice(sorted(_CLASSES))
+    fpe, bpe, pf = _CLASSES[cls]
+    shape = rng.choice(_SHAPES)
+    n = _elems(shape)
+    return b.add(cls, shape, flops=n * fpe, bytes_moved=n * bpe,
+                 parallel_fraction=pf, deps=deps)
+
+
+def _rand_body(rng, tag):
+    b = GraphBuilder(f"body_{tag}")
+    prev = None
+    for _ in range(rng.randint(1, 3)):
+        prev = _add_rand_op(b, rng, [prev] if prev is not None else [])
+    return b.build()
+
+
+def _rand_dynamic(seed):
+    """Random dynamic DAG; returns (graph, expected total op count)."""
+    rng = random.Random(seed)
+    b = DynamicGraphBuilder(f"dyn{seed}")
+    uids = []
+    n_static = 0
+    n_region_ops = 0
+    for _ in range(rng.randint(2, 4)):
+        deps = rng.sample(uids, min(len(uids), rng.randint(0, 2)))
+        uids.append(_add_rand_op(b, rng, deps))
+        n_static += 1
+    for r in range(rng.randint(1, 3)):
+        deps = rng.sample(uids, min(len(uids), rng.randint(0, 2)))
+        if rng.random() < 0.5:
+            body = _rand_body(rng, f"w{r}")
+            max_trips = rng.randint(1, 4)
+            actual = rng.randint(0, max_trips)
+            uids.append(b.add_while(
+                body, deps=deps, est_trips=rng.uniform(0.5, max_trips),
+                max_trips=max_trips, actual_trips=actual))
+            n_region_ops += actual * body.n_ops + 1    # + exit op
+        else:
+            t = _rand_body(rng, f"ct{r}")
+            f = _rand_body(rng, f"cf{r}")
+            taken = rng.random() < 0.5
+            uids.append(b.add_cond(t, f, deps=deps,
+                                   p_true=rng.random(), taken=taken))
+            n_region_ops += (t if taken else f).n_ops + 1
+    for _ in range(rng.randint(1, 2)):
+        deps = rng.sample(uids, rng.randint(1, min(len(uids), 3)))
+        uids.append(_add_rand_op(b, rng, deps))
+        n_static += 1
+    return b.build(), n_static + n_region_ops
+
+
+def _rand_static(seed):
+    rng = random.Random(seed)
+    b = GraphBuilder(f"stat{seed}")
+    uids = []
+    for _ in range(rng.randint(3, 8)):
+        deps = rng.sample(uids, min(len(uids), rng.randint(0, 3)))
+        uids.append(_add_rand_op(b, rng, deps))
+    return b.build()
+
+
+class TestDynamicScheduleInvariants:
+    @pytest.mark.parametrize("seed", range(10))
+    def test_exactly_once_deps_and_no_oversubscription(self, seed):
+        graph, expected = _rand_dynamic(seed)
+        machine = SimMachine()
+        rt = ConcurrencyRuntime(machine=machine)
+        res = rt.execute_step(graph)
+        # exactly once: every op the resolved shape materialized, no dupes
+        assert len(res.records) == expected
+        assert len({r.op.uid for r in res.records}) == expected
+        assert graph.unresolved_regions() == ()
+        # deps respected (records carry the materialized concrete deps)
+        start = {r.op.uid: r.start for r in res.records}
+        finish = {r.op.uid: r.finish for r in res.records}
+        for r in res.records:
+            for d in r.op.deps:
+                assert finish[d] <= start[r.op.uid] + 1e-12
+        # no core oversubscription at any instant
+        for t in sorted(set(start.values()) | set(finish.values())):
+            used = sum(r.threads for r in res.records
+                       if not r.hyper and r.start <= t < r.finish)
+            assert used <= machine.spec.cores
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_deterministic_twin_runs(self, seed):
+        ga, _ = _rand_dynamic(seed)
+        gb, _ = _rand_dynamic(seed)
+        ra = corun_timeline(ga, SimMachine(seed=0))
+        rb = corun_timeline(gb, SimMachine(seed=0))
+        assert ra.makespan == rb.makespan
+        assert not compare_timelines(timeline_rows(ra), timeline_rows(rb),
+                                     label_a="run-a", label_b="run-b")
+
+    def test_graph_is_reusable_across_runs(self):
+        """reset() restores the initial shape: the same DynamicOpGraph
+        object scheduled twice yields the identical timeline."""
+        graph, _ = _rand_dynamic(3)
+        rt = ConcurrencyRuntime(machine=SimMachine(seed=0))
+        rt.profile(graph)
+        a = rt.execute_step(graph)
+        b = rt.execute_step(graph)
+        assert a.makespan == b.makespan
+        assert not compare_timelines(timeline_rows(a), timeline_rows(b),
+                                     label_a="first", label_b="second")
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_zero_unresolved_regions_is_static_bitwise(self, seed):
+        static = _rand_static(seed)
+        dyn = DynamicOpGraph(name=static.name, ops=dict(static.ops))
+        assert dyn.unresolved_regions() == ()
+        assert dyn.profile_view() is dyn
+        rs = corun_timeline(static, SimMachine(seed=0))
+        rd = corun_timeline(dyn, SimMachine(seed=0))
+        assert rs.makespan == rd.makespan
+        assert not compare_timelines(timeline_rows(rs), timeline_rows(rd),
+                                     label_a="static", label_b="dynamic")
+
+
+# ---------------------------------------------------------------------------
+# expectation pricing
+# ---------------------------------------------------------------------------
+
+class TestExpectationPricing:
+    @pytest.fixture(scope="class")
+    def priced(self):
+        g = build_recurrent_step_graph(trips=2, max_trips=8, est_trips=4.0)
+        rt = ConcurrencyRuntime(machine=SimMachine(seed=0))
+        rt.profile(g)
+        return g, rt.planstore, rt.plan
+
+    def test_demand_scales_with_trip_prior(self, priced):
+        _, store, plan = priced
+        g_opt = build_recurrent_step_graph(trips=2, max_trips=8,
+                                           est_trips=1.0)
+        g_pess = build_recurrent_step_graph(trips=2, max_trips=8,
+                                            est_trips=8.0)
+        d_opt = store.remaining_demand(g_opt, plan)
+        d_pess = store.remaining_demand(g_pess, plan)
+        assert 0.0 < d_opt < d_pess
+        # the gap is exactly 7 expected iterations of body demand
+        (r_opt,) = g_opt.unresolved_regions()
+        body = store._plan_demand(r_opt.body, plan)
+        assert d_pess - d_opt == pytest.approx(7 * body, rel=1e-9)
+
+    def test_demand_falls_as_iterations_materialize(self, priced):
+        g, store, plan = priced
+        g.reset()
+        done = set()
+        demands = [store.remaining_demand(g, plan, done)]
+        frontier = [u for u, op in g.ops.items() if not op.deps]
+        while g.unresolved_regions():
+            uid = frontier.pop(0)
+            done.add(uid)
+            for ev in g.advance(uid, done):
+                frontier.extend(u for u in ev.new_uids
+                                if all(d in done for d in g.ops[u].deps))
+            for c in g.consumers(uid):
+                if c not in done and c not in frontier and \
+                        all(d in done for d in g.ops[c].deps):
+                    frontier.append(c)
+            demands.append(store.remaining_demand(g, plan, done))
+        assert all(b < a for a, b in zip(demands, demands[1:]))
+        # resolved: expectation collapses to the exact static remainder
+        exact = sum(store._plan_time(op, plan)
+                    * plan.per_instance[op.size_key].threads
+                    for u, op in g.ops.items() if u not in done)
+        assert demands[-1] == pytest.approx(exact, rel=1e-9)
+        g.reset()
+
+    def test_critical_path_covers_unresolved_regions(self, priced):
+        g, store, plan = priced
+        g.reset()
+        (region,) = g.unresolved_regions()
+        cp = store.remaining_critical_path(g, plan)
+        # the virtual exit node is priced and the gate chains through it
+        assert region.exit_uid in cp
+        tail = store.region_tail(region, plan)
+        assert tail > 0.0
+        embed = next(u for u, op in g.ops.items() if not op.deps)
+        assert cp[embed] >= tail
+
+    def test_cond_demand_is_probability_weighted(self):
+        lo = build_early_exit_wave(depth=1, accept=True, p_accept=1.0)
+        hi = build_early_exit_wave(depth=1, accept=True, p_accept=0.0)
+        rt = ConcurrencyRuntime(machine=SimMachine(seed=0))
+        rt.profile(lo)
+        store, plan = rt.planstore, rt.plan
+        cond_lo = next(r for r in lo.unresolved_regions()
+                       if r.kind == "cond")
+        cond_hi = next(r for r in hi.unresolved_regions()
+                       if r.kind == "cond")
+        # p_accept=1.0 prices the cheap verify branch only; 0.0 the
+        # expensive correction branch only
+        assert store.region_demand(cond_lo, plan) < \
+            store.region_demand(cond_hi, plan)
+
+
+# ---------------------------------------------------------------------------
+# trip-count learning
+# ---------------------------------------------------------------------------
+
+class TestTripCountLearning:
+    def test_estimator_ewma_semantics(self):
+        est = TripCountEstimator(alpha=0.5)
+        assert est.estimate("k", prior=8.0) == 8.0       # no data: prior
+        est.update("k", 3.0)
+        assert est.estimate("k", 8.0) == 3.0             # first obs wins
+        est.update("k", 4.0)
+        assert est.estimate("k", 8.0) == 3.5
+        est.update("k", 5.0)
+        assert est.estimate("k", 8.0) == 4.25
+        assert est.stats() == {"observed": 3, "keys": 1}
+
+    def test_pool_learns_trip_counts_across_tenants(self, machine):
+        pool = RuntimePool(machine=machine, config=PoolConfig(
+            max_active=2, runtime=RuntimeConfig(feedback="ewma")))
+        for i in range(3):
+            pool.submit(build_recurrent_step_graph(trips=2, name=f"rnn{i}"),
+                        submit_time=i * 0.0005)
+        res = pool.run()
+        key = ("while", "rnn_cell", (32, 32, 128))
+        # every tenant resolved at 2 trips: the EWMA converges there, so
+        # a later tenant prices 2 expected trips instead of max_trips=8
+        assert pool.trip_counts.values[key] == pytest.approx(2.0)
+        g = build_recurrent_step_graph(trips=2, name="next")
+        (region,) = g.unresolved_regions()
+        assert pool.trip_counts.estimate(region.key, 8.0) == \
+            pytest.approx(2.0)
+        assert res.n_region_resolves == 3
+        assert res.n_region_expands == 6
+
+    def test_frozen_store_ignores_observations(self):
+        g = build_recurrent_step_graph(trips=3, est_trips=8.0)
+        rt = ConcurrencyRuntime(machine=SimMachine(seed=0))
+        rt.profile(g)
+        (region,) = g.unresolved_regions()
+        before = rt.planstore.region_trips(region)
+        rt.planstore.observe_region(region, 3.0)
+        assert rt.planstore.region_trips(region) == before == 8.0
+
+
+# ---------------------------------------------------------------------------
+# pool integration: dynamic mixes, tracing, events-only accounting
+# ---------------------------------------------------------------------------
+
+def _dynamic_mix_pool(machine, sink=None, **cfg):
+    pool = RuntimePool(machine=machine, config=PoolConfig(
+        max_active=cfg.pop("max_active", 3),
+        runtime=RuntimeConfig(feedback="ewma"), sink=sink, **cfg))
+    jobs = [
+        pool.submit(build_recurrent_step_graph(trips=3), name="rnn-a"),
+        pool.submit(build_recurrent_step_graph(trips=5), name="rnn-b",
+                    submit_time=0.0005),
+        pool.submit(build_early_exit_wave(depth=2, accept=True),
+                    name="ee-a", submit_time=0.001),
+        pool.submit(build_early_exit_wave(depth=4, accept=False),
+                    name="ee-b", submit_time=0.0015),
+    ]
+    return pool, jobs
+
+
+class TestDynamicPool:
+    @pytest.fixture(scope="class")
+    def traced_dynamic(self, machine):
+        sink = RecordingSink()
+        pool, jobs = _dynamic_mix_pool(machine, sink)
+        res = pool.run()
+        return pool, jobs, res, sink
+
+    def test_exactly_once_and_all_jobs_done(self, traced_dynamic):
+        _, jobs, res, _ = traced_dynamic
+        # 3+5 rnn trips x 3 body ops, 2+4 decoder trips x 2 ops, one
+        # verify branch op each, 2 statics + exits per job
+        expected = {"rnn-a": 2 + 3 * 3 + 1, "rnn-b": 2 + 5 * 3 + 1,
+                    "ee-a": 2 + 2 * 2 + 1 + 1 + 1,
+                    "ee-b": 2 + 4 * 2 + 1 + 1 + 1}
+        for job in jobs:
+            assert job.done
+            recs = res.records[job.jid]
+            assert len(recs) == expected[job.name]
+            assert len({r.op.uid for r in recs}) == expected[job.name]
+
+    def test_no_oversubscription_across_region_instants(self, machine,
+                                                        traced_dynamic):
+        _, _, res, _ = traced_dynamic
+        spans = [(r.start, r.finish, r.threads)
+                 for recs in res.records.values()
+                 for r in recs if not r.hyper]
+        for t in sorted({t for s in spans for t in s[:2]}):
+            used = sum(th for s0, s1, th in spans if s0 <= t < s1)
+            assert used <= machine.spec.cores
+
+    def test_region_events_trace_expansion_instants(self, traced_dynamic):
+        _, _, res, sink = traced_dynamic
+        evs = sink.by_family(FAM_REGION)
+        expands = [e for e in evs if e.kind == "expand"]
+        resolves = [e for e in evs if e.kind == "resolve"]
+        assert len(expands) == res.n_region_expands == 3 + 5 + 2 + 4
+        # 2 while + (1 while + 1 cond) x 2 early-exit jobs
+        assert len(resolves) == res.n_region_resolves == 6
+        for e in evs:
+            assert e.data["region"] in ("while", "cond")
+            assert e.data["new_ops"] >= 1
+        for e in resolves:
+            assert e.data["outcome"] is not None
+
+    def test_events_only_accounting_matches_region_counters(
+            self, traced_dynamic):
+        _, _, res, sink = traced_dynamic
+        ev = metrics_from_events(sink.events)
+        assert ev.value("region.expand") == res.n_region_expands \
+            == res.metrics["region.expand"]
+        assert ev.value("region.resolve") == res.n_region_resolves \
+            == res.metrics["region.resolve"]
+
+    def test_all_six_families_fire_on_armed_dynamic_mix(self, machine):
+        sink = RecordingSink()
+        pool = RuntimePool(machine=machine, config=PoolConfig(
+            max_active=2, topology="quadrant",
+            max_outstanding_demand=5000.0,
+            preemption=PreemptionPolicy(enabled=True), sink=sink,
+            runtime=RuntimeConfig(feedback="ewma")))
+        for i in range(3):
+            submit = i * 0.0005
+            pool.submit(build_recurrent_step_graph(trips=4, name=f"d{i}"),
+                        submit_time=submit,
+                        deadline=(submit + 0.002 if i % 2 else None))
+        pool.run()
+        assert sink.families() == set(FAMILIES)
+
+
+# ---------------------------------------------------------------------------
+# events-only accounting of the economics kinds (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def _chain(name, cls, shape, flops, bm, ws, pf, n):
+    b = GraphBuilder(name)
+    prev = None
+    for _ in range(n):
+        prev = b.add(cls, shape, flops=flops, bytes_moved=bm,
+                     working_set=ws, parallel_fraction=pf,
+                     deps=[prev] if prev is not None else [])
+    return b.build()
+
+
+def _narrow_runner(n=2, flops=8e11):
+    return _chain("runner", "RunnerOp", (48, 96, 64), flops, 4e7, 4e7,
+                  0.96, n)
+
+
+def _wide_chain(n=2, flops=4e11):
+    return _chain("wide", "WideStep", (256, 256, 64), flops, 5e7, 5e7,
+                  0.99, n)
+
+
+def _giant_op():
+    return _chain("giant", "GiantStep", (256, 256, 64), 4e12, 5e7, 5e7,
+                  0.99, 1)
+
+
+def _blocker(n=2):
+    return _chain("blocker", "Huge", (512, 512, 64), 1e12, 1e9, 1e9,
+                  0.9, n)
+
+
+def _assert_economics_agreement(res, sink):
+    """The satellite pin: events-only accounting equals the result
+    counters for every economics kind."""
+    ev = metrics_from_events(sink.events)
+
+    def val(name):
+        return ev.counters[name].value if name in ev.counters else 0.0
+
+    assert val("pool.preemptions") == res.n_preemptions
+    assert val("pool.evictions") == res.n_evictions
+    assert val("pool.migrations") == res.n_migrations
+
+
+class TestEventsOnlyEconomicsAccounting:
+    def test_multi_victim_mix_agrees(self, machine):
+        sink = RecordingSink()
+        pool = RuntimePool(machine=machine, config=PoolConfig(
+            max_active=6, sink=sink,
+            preemption=PreemptionPolicy(enabled=True, max_victims=4)))
+        for i in range(4):
+            pool.submit(_narrow_runner(), name=f"r{i}")
+        pool.submit(_wide_chain(), name="wide", submit_time=0.05,
+                    deadline=0.15)
+        res = pool.run()
+        assert res.n_preemptions >= 2       # a victim SET was revoked
+        _assert_economics_agreement(res, sink)
+
+    def test_eviction_mix_agrees(self, machine):
+        sink = RecordingSink()
+        pool = RuntimePool(machine=machine, config=PoolConfig(
+            max_active=2, sink=sink,
+            preemption=PreemptionPolicy(enabled=True, evict_admitted=True),
+            runtime=RuntimeConfig(enable_s4=False)))
+        pool.submit(_blocker(), name="blocker")
+        pool.submit(_narrow_runner(n=1), name="bystander",
+                    submit_time=0.001)
+        pool.submit(_wide_chain(n=1), name="urgent", submit_time=0.01,
+                    deadline=0.02)
+        res = pool.run()
+        assert res.n_evictions == 1
+        _assert_economics_agreement(res, sink)
+
+    def test_migration_mix_agrees(self, machine):
+        sink = RecordingSink()
+        pool = RuntimePool(machine=machine, config=PoolConfig(
+            max_active=6, sink=sink,
+            preemption=PreemptionPolicy(enabled=True, migration=True)))
+        for i in range(2):
+            pool.submit(_narrow_runner(n=1, flops=2e11), name=f"r{i}")
+        pool.submit(_giant_op(), name="urgent", submit_time=0.05,
+                    deadline=0.15)
+        res = pool.run()
+        assert res.n_migrations >= 1
+        _assert_economics_agreement(res, sink)
+
+
+# ---------------------------------------------------------------------------
+# decision-instant dedupe (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_late_arrival_does_not_mask_earlier_slack_expiry(machine):
+    """One shared next-decision-instant helper: with a queued overdue
+    waiter whose slack expires at t~=0.02 and another arrival not due
+    until t=1.0, the pool must act at the EXPIRY, not the arrival."""
+    sink = RecordingSink()
+    pool = RuntimePool(machine=machine, config=PoolConfig(
+        max_active=2, sink=sink,
+        preemption=PreemptionPolicy(enabled=True, evict_admitted=True),
+        runtime=RuntimeConfig(enable_s4=False)))
+    pool.submit(_blocker(), name="blocker")
+    pool.submit(_narrow_runner(n=1), name="bystander", submit_time=0.001)
+    urgent = pool.submit(_wide_chain(n=1), name="urgent",
+                         submit_time=0.01, deadline=0.02)
+    pool.submit(_narrow_runner(n=1), name="late", submit_time=1.0)
+    res = pool.run()
+    evs = [e for e in sink.events
+           if e.family == "preemption" and e.kind == "evict"]
+    assert len(evs) == 1
+    # the waiter's cp (~0.28s) already exceeds its budget when it arrives
+    # at t=0.01, so the expiry instant IS the arrival instant — the evict
+    # must fire there, not wait for the t=1.0 arrival wakeup
+    assert evs[0].ts == pytest.approx(0.01, abs=1e-6)
+    assert urgent.done and res.n_evictions == 1
