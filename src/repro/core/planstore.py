@@ -67,6 +67,15 @@ OBS_REVOKE = "revoke"      # op preempted; observed = discarded partial run
 FEEDBACK_MODES = ("off", "ewma")
 
 
+def _freeze(x):
+    """JSON arrays -> tuples, recursively.  Learned-state keys are tuples
+    (``cross_graph_key`` values, region keys) and JSON round-trips them
+    as lists; freezing restores dict-key hashability and equality."""
+    if isinstance(x, list):
+        return tuple(_freeze(v) for v in x)
+    return x
+
+
 @dataclasses.dataclass(frozen=True)
 class OpObservation:
     """One scheduler-reported execution event for one op launch."""
@@ -394,6 +403,38 @@ class CorrectionTable:
             "max_abs_log_correction": max(mags, default=0.0),
         }
 
+    # ---- persistence (service daemon job store) -----------------------
+    def to_dict(self) -> dict:
+        """JSON form.  Floats round-trip exactly (shortest-repr doubles),
+        so a reloaded table corrects predictions bit-identically — the
+        property the daemon crash-recovery test pins."""
+        return {
+            "alpha": self.alpha,
+            "ratio_bounds": list(self.ratio_bounds),
+            "zero_error": self.zero_error,
+            "point": [{"key": k, "threads": t, "variant": v, "c": c}
+                      for (k, t, v), c in self.point.items()],
+            "overall": [{"key": k, "c": c}
+                        for k, c in self.overall.items()],
+            "observed": self.observed,
+            "revoked": self.revoked,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CorrectionTable":
+        return cls(
+            alpha=float(d["alpha"]),
+            ratio_bounds=tuple(d["ratio_bounds"]),
+            zero_error=bool(d["zero_error"]),
+            point={(_freeze(e["key"]), int(e["threads"]),
+                    bool(e["variant"])): float(e["c"])
+                   for e in d["point"]},
+            overall={_freeze(e["key"]): float(e["c"])
+                     for e in d["overall"]},
+            observed=int(d["observed"]),
+            revoked=int(d["revoked"]),
+        )
+
 
 @dataclasses.dataclass
 class TripCountEstimator:
@@ -424,6 +465,20 @@ class TripCountEstimator:
 
     def stats(self) -> dict[str, float]:
         return {"observed": self.observed, "keys": len(self.values)}
+
+    # ---- persistence (service daemon job store) -----------------------
+    def to_dict(self) -> dict:
+        return {"alpha": self.alpha,
+                "values": [{"key": k, "v": v}
+                           for k, v in self.values.items()],
+                "observed": self.observed}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TripCountEstimator":
+        return cls(alpha=float(d["alpha"]),
+                   values={_freeze(e["key"]): float(e["v"])
+                           for e in d["values"]},
+                   observed=int(d["observed"]))
 
 
 class AdaptivePlanStore(PlanStore):

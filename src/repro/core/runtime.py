@@ -32,40 +32,99 @@ from repro.core.planstore import (OBS_FINISH, OpObservation, PlanStore,
                                   make_plan_store)
 from repro.core.scheduler import CorunScheduler, ScheduleResult, uniform_schedule
 from repro.core.simmachine import Placement, SimMachine
-from repro.core.strategy import StrategyConfig
-from repro.obs.trace import NullSink, TraceSink
+from repro.core.strategy import (CONFIG_SCHEMA_VERSION, StrategyConfig,
+                                 _check_config_dict,
+                                 fold_deprecated_strategy_kwargs)
+from repro.obs.trace import TraceSink
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(init=False)
 class RuntimeConfig:
+    """Single-job runtime knobs.  Strategy-owned knobs (S3/S4 switches,
+    candidate counts, topology, feedback, sink, ...) live ONCE on the
+    composed ``strategy`` field; only the knobs the runtime itself
+    consumes (profiling interval, S2 clamp, interference threshold) are
+    declared here.  The old flat constructor kwargs
+    (``RuntimeConfig(feedback="ewma")``) keep working with a
+    DeprecationWarning — they fold onto ``strategy``."""
+
     interval: int = 4               # hill-climb probe interval x
-    candidates: int = 3             # Strategy 3 candidate count
     max_deviation: int = 2          # Strategy 2 clamp (paper's empirical 2)
-    enable_s3: bool = True
-    enable_s4: bool = True
     strategy2: bool = True
-    max_ht_corunners: int = 2
     interference_threshold: float = 1.35
-    min_fallback_cores: int = 4     # run-biggest fallback floor
-    fallback_slack: float = 1.25    # fallback horizon slack
-    topology: str = "flat"          # "flat" | "quadrant" placement
-    feedback: str = "off"           # closed-loop plan store ("off" | "ewma")
-    # decision-trace sink (repro.obs): NullSink = tracing off, bit-for-bit
-    # the untraced scheduler
-    sink: TraceSink = dataclasses.field(default_factory=NullSink)
+    strategy: StrategyConfig = dataclasses.field(
+        default_factory=StrategyConfig)
+
+    def __init__(self, interval: int = 4, max_deviation: int = 2,
+                 strategy2: bool = True,
+                 interference_threshold: float = 1.35,
+                 strategy: StrategyConfig | None = None, **deprecated):
+        self.interval = interval
+        self.max_deviation = max_deviation
+        self.strategy2 = strategy2
+        self.interference_threshold = interference_threshold
+        self.strategy = fold_deprecated_strategy_kwargs(
+            type(self).__name__,
+            strategy if strategy is not None else StrategyConfig(),
+            deprecated)
+
+    # read-only views of the strategy-owned knobs, so the sprawling
+    # existing read sites (schedulers, benchmarks, tests) keep working
+    @property
+    def enable_s3(self) -> bool: return self.strategy.enable_s3
+
+    @property
+    def enable_s4(self) -> bool: return self.strategy.enable_s4
+
+    @property
+    def candidates(self) -> int: return self.strategy.candidates
+
+    @property
+    def max_ht_corunners(self) -> int: return self.strategy.max_ht_corunners
+
+    @property
+    def min_fallback_cores(self) -> int:
+        return self.strategy.min_fallback_cores
+
+    @property
+    def fallback_slack(self) -> float: return self.strategy.fallback_slack
+
+    @property
+    def topology(self) -> str: return self.strategy.topology
+
+    @property
+    def feedback(self) -> str: return self.strategy.feedback
+
+    @property
+    def sink(self) -> TraceSink: return self.strategy.sink
 
     def strategy_config(self) -> StrategyConfig:
         """The shared-core view of these knobs (see repro.core.strategy).
-        The multi-tenant PoolConfig builds the same StrategyConfig, so
+        The multi-tenant PoolConfig composes the same StrategyConfig, so
         Strategy-3/4 rule parameters cannot drift between schedulers."""
-        return StrategyConfig(
-            enable_s3=self.enable_s3, enable_s4=self.enable_s4,
-            candidates=self.candidates,
-            max_ht_corunners=self.max_ht_corunners,
-            min_fallback_cores=self.min_fallback_cores,
-            fallback_slack=self.fallback_slack,
-            topology=self.topology, feedback=self.feedback,
-            sink=self.sink)
+        return self.strategy
+
+    def to_dict(self) -> dict:
+        """Versioned JSON form (the daemon's persisted store and the CLI
+        share this serialization; the strategy nests its own document)."""
+        return {"schema": CONFIG_SCHEMA_VERSION,
+                "interval": self.interval,
+                "max_deviation": self.max_deviation,
+                "strategy2": self.strategy2,
+                "interference_threshold": self.interference_threshold,
+                "strategy": self.strategy.to_dict()}
+
+    @classmethod
+    def from_dict(cls, d) -> "RuntimeConfig":
+        d = dict(d)
+        strat = d.pop("strategy", None)
+        kw = _check_config_dict(
+            cls.__name__, d,
+            {"interval", "max_deviation", "strategy2",
+             "interference_threshold"})
+        if strat is not None:
+            kw["strategy"] = StrategyConfig.from_dict(strat)
+        return cls(**kw)
 
 
 @dataclasses.dataclass
@@ -204,6 +263,33 @@ class ConcurrencyRuntime:
 # Real-payload executor
 # ---------------------------------------------------------------------------
 
+def report_payload_observation(store: PlanStore, plan: ConcurrencyPlan | None,
+                               op, dt: float) -> None:
+    """Report one real payload completion through ``PlanStore.observe``.
+
+    The wall time is attributed to the op's frozen-plan width (falling
+    back to solo when the plan has no entry), so real timings feed the
+    same closed loop the simulated schedulers use.  Shared by the batch
+    ``RealGraphExecutor.run`` path and the service daemon's persistent
+    executor."""
+    if plan is not None and op.size_key in plan.per_instance:
+        p = plan.per_instance[op.size_key]
+        threads, variant = p.threads, p.variant
+    else:
+        threads, variant = 1, True
+    try:
+        predicted = store.predict(op, threads, variant)
+    except KeyError:
+        # op never profiled under this store — the observation record
+        # still needs a predicted value (it is informative only:
+        # AdaptivePlanStore re-derives the base prediction itself and
+        # skips ops without a curve)
+        predicted = dt
+    store.observe(OpObservation(
+        op=op, threads=threads, variant=variant, hyper=False,
+        predicted=predicted, observed=dt, kind=OBS_FINISH))
+
+
 class RealGraphExecutor:
     """Dependency-ordered execution of op payloads on a worker pool.
 
@@ -217,10 +303,51 @@ class RealGraphExecutor:
     completion is reported through ``PlanStore.observe`` as an
     ``OBS_FINISH`` event at the op's frozen-plan width — the first step
     toward a pool-backed real executor whose observed wall times drive
-    online re-estimation."""
+    online re-estimation.
 
-    def __init__(self, max_workers: int = 2):
+    ``persistent=True`` switches to the service-daemon mode: the worker
+    pool outlives any one graph and callers drive it op-by-op with
+    ``submit_op`` (the pool's launch decisions pick the order) instead of
+    handing over a whole graph.  ``submit_op`` futures wait for their
+    dependency futures INSIDE the worker, which keeps ``Future.cancel``
+    meaningful: a revoked op that has not reached a worker yet is
+    cancelled before any payload runs.  Deadlock-free because payloads
+    are only submitted in dependency order (the pool launches an op only
+    after its deps completed), so every queued task waits only on
+    strictly earlier submissions."""
+
+    def __init__(self, max_workers: int = 2, *, persistent: bool = False):
         self.max_workers = max_workers
+        self._pool: ThreadPoolExecutor | None = (
+            ThreadPoolExecutor(max_workers=max_workers)
+            if persistent else None)
+
+    # ---- persistent (service-daemon) mode ------------------------------
+    def submit_op(self, op, deps: dict[int, object]) -> Future:
+        """Submit one op's payload to the persistent worker set.
+
+        ``deps`` maps dep uid -> either the dep's ``Future`` (resolved
+        inside the worker) or an already-materialized value (ops without
+        payloads produce ``None`` directly).  Returns a future of
+        ``(result, wall_seconds)``."""
+        assert self._pool is not None, "submit_op needs persistent=True"
+
+        def call() -> tuple[object, float]:
+            # dep futures resolve to (value, wall_s); payloads see values
+            vals = {u: (f.result()[0] if isinstance(f, Future) else f)
+                    for u, f in deps.items()}
+            ts = time.perf_counter()
+            out = op.payload(vals) if op.payload else None
+            return out, time.perf_counter() - ts
+
+        return self._pool.submit(call)
+
+    def close(self) -> None:
+        """Shut down the persistent worker set (queued work cancelled,
+        running payloads finish).  No-op in batch mode."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=False, cancel_futures=True)
+            self._pool = None
 
     def run(self, graph: OpGraph, *, store: PlanStore | None = None,
             plan: ConcurrencyPlan | None = None
@@ -234,23 +361,7 @@ class RealGraphExecutor:
         def observe(uid: int, dt: float) -> None:
             if store is None:
                 return
-            op = graph.ops[uid]
-            if plan is not None and op.size_key in plan.per_instance:
-                p = plan.per_instance[op.size_key]
-                threads, variant = p.threads, p.variant
-            else:
-                threads, variant = 1, True
-            try:
-                predicted = store.predict(op, threads, variant)
-            except KeyError:
-                # op never profiled under this store — the observation
-                # record still needs a predicted value (it is informative
-                # only: AdaptivePlanStore re-derives the base prediction
-                # itself and skips ops without a curve)
-                predicted = dt
-            store.observe(OpObservation(
-                op=op, threads=threads, variant=variant, hyper=False,
-                predicted=predicted, observed=dt, kind=OBS_FINISH))
+            report_payload_observation(store, plan, graph.ops[uid], dt)
 
         with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
             futures: dict[Future, int] = {}

@@ -49,6 +49,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import warnings
 from typing import Callable, Hashable, Iterable, Mapping, Sequence
 
 from repro.core.concurrency import OpPlan
@@ -127,6 +128,61 @@ def pick_admissible(cands: list[OpPlan], free: int,
     return min(adm, key=lambda c: c.threads) if adm else None
 
 
+# On-disk schema version shared by every config ``to_dict``/``from_dict``
+# pair (StrategyConfig here, RuntimeConfig/PoolConfig in repro.core.runtime
+# and repro.multitenant.pool).  The pool daemon persists configs with this
+# schema and the CLI accepts them, so all three layers share ONE
+# serialization; bump on any layout change — ``from_dict`` refuses other
+# versions, so a stale daemon store can never half-load into live knobs.
+CONFIG_SCHEMA_VERSION = 1
+
+
+def _check_config_dict(cls_name: str, d: dict, known: set[str], *,
+                       versioned: bool = True) -> dict:
+    """Shared ``from_dict`` validation: schema version checked (when the
+    dict is a top-level versioned document) and unknown keys REJECTED —
+    a typo'd or future-schema knob must fail loudly, not be silently
+    dropped into a config that then schedules differently."""
+    d = dict(d)
+    if versioned:
+        schema = d.pop("schema", None)
+        if schema != CONFIG_SCHEMA_VERSION:
+            raise ValueError(
+                f"{cls_name}.from_dict: schema version {schema!r} != "
+                f"{CONFIG_SCHEMA_VERSION}")
+    unknown = sorted(set(d) - known)
+    if unknown:
+        raise ValueError(f"{cls_name}.from_dict: unknown keys {unknown}")
+    return d
+
+
+def fold_deprecated_strategy_kwargs(cls_name: str, strategy: "StrategyConfig",
+                                    kwargs: dict) -> "StrategyConfig":
+    """Back-compat shim for the config redesign: ``RuntimeConfig`` and
+    ``PoolConfig`` used to re-declare strategy-owned knobs (topology,
+    feedback, preemption, fallback floors, ...) as their own constructor
+    kwargs.  Those spellings keep working — folded onto the composed
+    ``StrategyConfig`` with a DeprecationWarning naming the keys — so
+    existing callers and benchmarks run unchanged while new code passes
+    ``strategy=StrategyConfig(...)``.  Overrides apply ON TOP of an
+    explicitly passed strategy, which keeps ``dataclasses.replace(cfg,
+    feedback="ewma")`` working (replace re-passes the old ``strategy``
+    field plus the deprecated key)."""
+    if not kwargs:
+        return strategy
+    known = {f.name for f in dataclasses.fields(StrategyConfig)}
+    unknown = sorted(set(kwargs) - known)
+    if unknown:
+        raise TypeError(
+            f"{cls_name}() got unexpected keyword arguments {unknown}")
+    warnings.warn(
+        f"{cls_name}({', '.join(sorted(kwargs))}) is deprecated: these "
+        f"knobs live on StrategyConfig — pass "
+        f"strategy=StrategyConfig(...) instead",
+        DeprecationWarning, stacklevel=3)
+    return dataclasses.replace(strategy, **kwargs)
+
+
 @dataclasses.dataclass(frozen=True)
 class PreemptionPolicy:
     """Checkpoint-free preemption knobs (off by default, so every scheduler
@@ -169,6 +225,17 @@ class PreemptionPolicy:
     # op squeezed at claim time or priced wrong by a stale curve
     migration: bool = False
 
+    def to_dict(self) -> dict:
+        """JSON form (nested inside a versioned StrategyConfig document,
+        so it carries no schema key of its own)."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "PreemptionPolicy":
+        return cls(**_check_config_dict(
+            cls.__name__, dict(d),
+            {f.name for f in dataclasses.fields(cls)}, versioned=False))
+
 
 @dataclasses.dataclass(frozen=True)
 class StrategyConfig:
@@ -201,6 +268,33 @@ class StrategyConfig:
     # bit-for-bit identical (locked by the traced parity leg); all
     # NullSink instances compare equal so config equality is unaffected.
     sink: TraceSink = dataclasses.field(default_factory=NullSink)
+
+    # the knobs excluded from serialization: a sink is a live process
+    # object (a deserialized config starts with the inert NullSink and a
+    # daemon attaches its own sink explicitly)
+    _UNSERIALIZED = frozenset({"sink", "preemption"})
+
+    def to_dict(self) -> dict:
+        """Versioned JSON form — the ONE serialization of strategy knobs
+        shared by the CLI (``--config``), the daemon's persisted store,
+        and ``RuntimeConfig``/``PoolConfig`` round-trips."""
+        d: dict = {"schema": CONFIG_SCHEMA_VERSION}
+        for f in dataclasses.fields(self):
+            if f.name not in self._UNSERIALIZED:
+                d[f.name] = getattr(self, f.name)
+        d["preemption"] = self.preemption.to_dict()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "StrategyConfig":
+        d = dict(d)
+        pre = d.pop("preemption", None)
+        kw = _check_config_dict(
+            cls.__name__, d,
+            {f.name for f in dataclasses.fields(cls)} - cls._UNSERIALIZED)
+        if pre is not None:
+            kw["preemption"] = PreemptionPolicy.from_dict(pre)
+        return cls(**kw)
 
 
 class StrategyAdapter(abc.ABC):

@@ -44,27 +44,41 @@ import argparse
 import json
 import pathlib
 
-from repro.core import SimMachine, build_paper_graph
-from repro.core.graph import (OpGraph, build_early_exit_wave,
-                              build_recurrent_step_graph)
+from repro.core import SimMachine
 from repro.multitenant import (PlanCache, PoolConfig, PreemptionPolicy,
                                RuntimePool)
 from repro.obs import (RecordingSink, configure_logging, export_pool_trace,
                        get_logger)
+from repro.service.spec import DYNAMIC_WORKLOADS, JobSpec, submit_spec
 
 logger = get_logger(__name__)
 
 
-def _dynamic_graph(kind: str, i: int) -> OpGraph:
-    """One dynamic-mix tenant: trips/depths vary with the job index so a
-    ``--trip-count-feedback`` run has a distribution to learn."""
-    if kind == "rnn":
-        return build_recurrent_step_graph(trips=4 + (i % 3), max_trips=8,
-                                          name=f"rnn{i}")
-    if kind == "wave":
-        return build_early_exit_wave(depth=1 + (i % 3), max_depth=6,
-                                     accept=(i % 2 == 0), name=f"wave{i}")
-    raise SystemExit(f"--dynamic jobs must be rnn|wave, got {kind!r}")
+def mix_specs(models: list[str], prios: list[float],
+              budgets: list[float | None], *, arrival_gap: float = 0.0,
+              dynamic: bool = False, scale: int = 1) -> list[JobSpec]:
+    """The tenant mix as ``JobSpec``s — this launcher is a thin parser
+    over the wire schema (the daemon inbox and ``ServeEngine`` consume
+    the same schema).  Dynamic-mix trips/depths vary with the job index
+    so a ``--trip-count-feedback`` run has a distribution to learn."""
+    specs = []
+    for i, (model, prio, budget) in enumerate(zip(models, prios, budgets)):
+        common = dict(name=f"{model}-{i}", priority=prio,
+                      submit_time=i * arrival_gap, latency_budget=budget)
+        if not dynamic:
+            specs.append(JobSpec(workload=model, scale=scale, **common))
+        elif model == "rnn":
+            specs.append(JobSpec(workload="rnn", trips=4 + (i % 3),
+                                 max_trips=8, **common))
+        elif model == "wave":
+            specs.append(JobSpec(workload="wave", depth=1 + (i % 3),
+                                 max_depth=6, accept=(i % 2 == 0),
+                                 **common))
+        else:
+            raise SystemExit(
+                f"--dynamic jobs must be {'|'.join(DYNAMIC_WORKLOADS)}, "
+                f"got {model!r}")
+    return specs
 
 
 def main() -> None:
@@ -215,14 +229,10 @@ def main() -> None:
                 migration=args.migrate)
                 if (args.preempt or args.max_victims > 1
                     or args.evict_admitted or args.migrate) else None)))
-    for i, (model, prio, budget) in enumerate(zip(models, prios, budgets)):
-        submit_time = i * args.arrival_gap
-        graph = (_dynamic_graph(model, i) if args.dynamic
-                 else build_paper_graph(model, scale=args.scale))
-        pool.submit(graph, priority=prio, name=f"{model}-{i}",
-                    submit_time=submit_time,
-                    deadline=(submit_time + budget
-                              if budget is not None else None))
+    for spec in mix_specs(models, prios, budgets,
+                          arrival_gap=args.arrival_gap,
+                          dynamic=args.dynamic, scale=args.scale):
+        submit_spec(pool, spec)
     res = pool.run()
     serial = pool.run_serial()
     if cache_path is not None:

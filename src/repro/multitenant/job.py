@@ -85,6 +85,9 @@ class Job:
     # quadrant of the job's most recent placed launch (topology="quadrant"
     # only) — the pool's tenant-to-quadrant affinity hint
     last_quadrant: int | None = None
+    # set by RuntimePool.cancel: the job left the pool before finishing
+    # (finish_time stays None — a cancelled job has no latency)
+    cancelled: bool = False
 
     @property
     def done(self) -> bool:
@@ -228,6 +231,16 @@ class JobQueue:
         bisect.insort(self._waiting,
                       (-job.priority, deadline, job.submit_time,
                        job.queue_seq, job))
+
+    def remove(self, jid: int) -> bool:
+        """Drop one WAITING job from the queue (job cancellation).
+        Returns False when the jid is not waiting (already admitted,
+        finished, or unknown) — the caller decides what that means."""
+        for i, (*_, job) in enumerate(self._waiting):
+            if job.jid == jid:
+                del self._waiting[i]
+                return True
+        return False
 
     def __len__(self) -> int:
         return len(self._waiting)

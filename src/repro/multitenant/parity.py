@@ -96,6 +96,30 @@ def pool_timeline(graph: OpGraph, machine: SimMachine | None = None,
     return res.per_job_schedule(job.jid)
 
 
+def service_timeline(model: str, machine: SimMachine | None = None,
+                     config: RuntimeConfig | None = None, *,
+                     scale: int = 1) -> ScheduleResult:
+    """The same graph as the only tenant of a ``--once`` pool DAEMON
+    (submit-all-then-drain through ``repro.service.PoolDaemon``, state
+    dir discarded).  The daemon wraps the pool in checkpointing, a job
+    store, and the payload-observer seam — all of which must be
+    bit-for-bit inert on the scheduling timeline."""
+    import tempfile
+
+    # function-local: parity is imported by the multitenant package
+    # __init__, and the service package imports multitenant modules
+    from repro.service import JobSpec, PoolDaemon
+    with tempfile.TemporaryDirectory() as td:
+        daemon = PoolDaemon(
+            td, config=PoolConfig(max_active=1,
+                                  runtime=config or RuntimeConfig()),
+            machine=machine or SimMachine())
+        daemon.submit(JobSpec(workload=model, scale=scale))
+        res = daemon.drain()
+        daemon.close()
+        return res.per_job_schedule(daemon.pool.jobs[0].jid)
+
+
 def timeline_rows(result: ScheduleResult) -> list[dict]:
     """JSON-serializable per-op launch records (golden-fixture format).
 
@@ -130,7 +154,7 @@ def check_parity(models: Iterable[str] = ("resnet50", "dcgan"), *,
     """Pool-vs-corun parity over paper-zoo models, plus the closed-loop
     zero-error leg and the trace-inertness leg.
 
-    Per model, SEVEN pool/corun timelines must agree bitwise with the
+    Per model, EIGHT pool/corun timelines must agree bitwise with the
     single-graph ``feedback="off"`` reference: the single-job pool (the
     strategy-core differential), a single-job pool with a live
     ``RecordingSink`` (the observability lock — tracing must be
@@ -141,9 +165,12 @@ def check_parity(models: Iterable[str] = ("resnet50", "dcgan"), *,
     be inert unless armed AND triggered), both schedulers re-run with
     ``feedback="ewma"`` on a zero-error observation stream (the
     blend-math lock — an exact observation may not move any prediction),
-    and both schedulers run on the same ops wrapped in a
-    ``DynamicOpGraph`` with ZERO regions (the dynamic-control-flow lock —
-    the region machinery must be bit-for-bit inert on static graphs).
+    both schedulers run on the same ops wrapped in a ``DynamicOpGraph``
+    with ZERO regions (the dynamic-control-flow lock — the region
+    machinery must be bit-for-bit inert on static graphs), and a
+    submit-all-then-drain run through the pool DAEMON (the service lock
+    — checkpointing, the job store, and the payload-observer seam must
+    not perturb the timeline).
 
     Returns ``{"ok": bool, "models": {name: {"ok", "makespan",
     "divergences"}}}``.  Uses equal-seeded machines (the sim machine is a
@@ -153,7 +180,8 @@ def check_parity(models: Iterable[str] = ("resnet50", "dcgan"), *,
     divergence only reachable with a larger ready frontier."""
     report: dict = {"ok": True, "models": {}}
     base = config or RuntimeConfig()
-    fb = dataclasses.replace(base, feedback="ewma")
+    fb = dataclasses.replace(
+        base, strategy=dataclasses.replace(base.strategy, feedback="ewma"))
     for model in dict.fromkeys(models):        # dedupe, keep order
         graph = build_paper_graph(model, scale=scale)
         # the same ops as a region-free dynamic graph: the trivial fixed
@@ -183,6 +211,11 @@ def check_parity(models: Iterable[str] = ("resnet50", "dcgan"), *,
             "corun-dyn0": corun_timeline(dyn, SimMachine(seed=seed),
                                          config),
             "pool-dyn0": pool_timeline(dyn, SimMachine(seed=seed), config),
+            # submit-all-then-drain through the pool DAEMON: the service
+            # layer (job store, per-instant checkpointing, observer seam)
+            # must reproduce the library pool bit-for-bit
+            "service-once": service_timeline(
+                model, SimMachine(seed=seed), config, scale=scale),
         }
         divs: list[str] = []
         if not sink.events:

@@ -31,7 +31,9 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import pathlib
+import tempfile
 from typing import Hashable
 
 from repro.core.perfmodel import CurveModel
@@ -41,6 +43,35 @@ logger = get_logger(__name__)
 
 # bump whenever the on-disk layout changes; load() refuses other versions
 SCHEMA_VERSION = 1
+
+
+def atomic_write_text(path: str | pathlib.Path, text: str) -> None:
+    """Write-temp-then-rename so readers NEVER see a partial file.
+
+    A crash mid-write used to truncate the target in place: ``load``
+    would then degrade to an empty cache, silently discarding every
+    probe already paid for.  Writing to a tempfile in the same directory
+    and ``os.replace``-ing it over the target is atomic on POSIX — a
+    crash leaves either the old complete file or the new complete file,
+    and a stray ``.tmp`` is ignored by every loader.  The service-daemon
+    job store persists through the same helper."""
+    path = pathlib.Path(path)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=path.name + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        # never leave the tempfile behind on failure; the target is
+        # untouched either way
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def _freeze(x):
@@ -179,7 +210,9 @@ class PlanCache:
             "entries": [{"key": k, "curve": _curve_to_json(c)}
                         for k, c in self.curves.items()],
         }
-        pathlib.Path(path).write_text(json.dumps(payload))
+        # atomic: a crash mid-dump must leave the previous good cache,
+        # not a truncated file that load() degrades to empty
+        atomic_write_text(path, json.dumps(payload))
 
     @classmethod
     def load(cls, path: str | pathlib.Path) -> "PlanCache":

@@ -71,62 +71,122 @@ from repro.obs.trace import (FAM_ADMISSION, FAM_PLANSTORE, FAM_PREEMPTION,
                              TraceSink)
 from repro.core.runtime import ConcurrencyRuntime, RuntimeConfig
 from repro.core.simmachine import SimMachine
-from repro.core.strategy import (PreemptionPolicy, ScheduledOp,
-                                 ScheduleResult, StrategyAdapter,
-                                 StrategyConfig, StrategyCore)
+from repro.core.strategy import (CONFIG_SCHEMA_VERSION, PreemptionPolicy,
+                                 ScheduledOp, ScheduleResult,
+                                 StrategyAdapter, StrategyConfig,
+                                 StrategyCore, _check_config_dict,
+                                 fold_deprecated_strategy_kwargs)
 from repro.multitenant.job import Job, JobQueue, fairness_index, jain
 from repro.multitenant.plancache import PlanCache
 
 NodeKey = tuple[int, int]           # (jid, uid)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(init=False)
 class PoolConfig:
-    """Pool-level knobs (admission + fallback), composed with the per-job
-    ``RuntimeConfig`` so every profiling/strategy knob lives in exactly
-    one place and the pool's delegated runtimes see the same settings."""
+    """Pool-level knobs (admission + reservation), composed with the
+    per-job ``RuntimeConfig`` so every profiling/strategy knob lives in
+    exactly one place and the pool's delegated runtimes see the same
+    settings.
+
+    Strategy-owned knobs (preemption, topology, feedback, fallback
+    floors, sink) are NOT re-declared here: set them on
+    ``runtime.strategy``, or pass ``strategy=StrategyConfig(...)`` to
+    give the POOL a deliberately different policy than its per-job
+    runtimes (``strategy=None`` inherits ``runtime``'s).  The old flat
+    kwargs (``PoolConfig(preemption=..., feedback="ewma")``) keep
+    working with a DeprecationWarning — non-None ones fold onto the
+    pool's strategy view, preserving the old override-only-when-set
+    semantics."""
 
     max_active: int = 3             # admission: concurrent tenants
     max_outstanding_demand: float | None = None   # admission: core-seconds
     # hold the last active slot for a strictly-higher-priority deadlined
     # arrival due within this many seconds (0 = no reservation)
     reservation_window: float = 0.0
-    # deadline-driven preemption (off by default: the differential/golden
-    # suites and every deadline-free pool are bit-for-bit unchanged)
-    preemption: PreemptionPolicy | None = None
-    # fallback knobs live on RuntimeConfig (the one authoritative home,
-    # shared with the single-graph scheduler); set these only to give the
-    # POOL a deliberately different fallback policy
-    min_fallback_cores: int | None = None
-    fallback_slack: float | None = None
-    # topology-aware placement ("flat" | "quadrant"); like the fallback
-    # knobs this defaults to the RuntimeConfig setting and overrides only
-    # when explicitly set, so flat pools stay bit-identical to the
-    # single-graph scheduler
-    topology: str | None = None
-    # closed-loop plan feedback ("off" | "ewma" — see repro.core.planstore);
-    # defaults to the RuntimeConfig setting like the knobs above, so
-    # feedback-free pools stay bit-identical to the PR-4 schedulers
-    feedback: str | None = None
-    # decision-trace sink (repro.obs); None = inherit the RuntimeConfig
-    # sink (whose default NullSink keeps tracing bit-for-bit inert)
-    sink: TraceSink | None = None
     runtime: RuntimeConfig = dataclasses.field(default_factory=RuntimeConfig)
+    # pool-level strategy override; None = inherit runtime.strategy
+    strategy: StrategyConfig | None = None
+
+    def __init__(self, max_active: int = 3,
+                 max_outstanding_demand: float | None = None,
+                 reservation_window: float = 0.0,
+                 runtime: RuntimeConfig | None = None,
+                 strategy: StrategyConfig | None = None, **deprecated):
+        self.max_active = max_active
+        self.max_outstanding_demand = max_outstanding_demand
+        self.reservation_window = reservation_window
+        self.runtime = runtime if runtime is not None else RuntimeConfig()
+        unknown = sorted(set(deprecated)
+                         - {f.name for f in
+                            dataclasses.fields(StrategyConfig)})
+        if unknown:
+            raise TypeError(
+                f"PoolConfig() got unexpected keyword arguments {unknown}")
+        # the old flat kwargs defaulted to None = "inherit from runtime":
+        # only explicitly-set ones override, so drop Nones before folding
+        overrides = {k: v for k, v in deprecated.items() if v is not None}
+        if overrides:
+            base = (strategy if strategy is not None
+                    else self.runtime.strategy_config())
+            strategy = fold_deprecated_strategy_kwargs(
+                type(self).__name__, base, overrides)
+        self.strategy = strategy
 
     def strategy_config(self) -> StrategyConfig:
-        """Same StrategyConfig RuntimeConfig.strategy_config builds —
+        """Same StrategyConfig RuntimeConfig.strategy_config returns —
         one shared core, one knob set, no drift: a single-job pool stays
-        bit-identical to CorunScheduler for ANY RuntimeConfig.  Pool-level
-        overrides apply only when explicitly set."""
-        cfg = self.runtime.strategy_config()
-        overrides = {k: v for k, v in (
-            ("min_fallback_cores", self.min_fallback_cores),
-            ("fallback_slack", self.fallback_slack),
-            ("topology", self.topology),
-            ("feedback", self.feedback),
-            ("sink", self.sink),
-            ("preemption", self.preemption)) if v is not None}
-        return dataclasses.replace(cfg, **overrides) if overrides else cfg
+        bit-identical to CorunScheduler for ANY RuntimeConfig.  A
+        pool-level ``strategy`` applies only when explicitly set."""
+        if self.strategy is not None:
+            return self.strategy
+        return self.runtime.strategy_config()
+
+    def to_dict(self) -> dict:
+        """Versioned JSON form — what the service daemon persists in its
+        job store and what the CLI accepts, one serialization for all
+        three layers."""
+        return {"schema": CONFIG_SCHEMA_VERSION,
+                "max_active": self.max_active,
+                "max_outstanding_demand": self.max_outstanding_demand,
+                "reservation_window": self.reservation_window,
+                "runtime": self.runtime.to_dict(),
+                "strategy": (None if self.strategy is None
+                             else self.strategy.to_dict())}
+
+    @classmethod
+    def from_dict(cls, d) -> "PoolConfig":
+        d = dict(d)
+        rt, strat = d.pop("runtime", None), d.pop("strategy", None)
+        kw = _check_config_dict(
+            cls.__name__, d,
+            {"max_active", "max_outstanding_demand", "reservation_window"})
+        if rt is not None:
+            kw["runtime"] = RuntimeConfig.from_dict(rt)
+        if strat is not None:
+            kw["strategy"] = StrategyConfig.from_dict(strat)
+        return cls(**kw)
+
+
+class PoolObserver:
+    """Execution-backend hook points on the pool's discrete-event loop.
+
+    The service daemon attaches one to mirror sim decisions onto REAL
+    payload execution: a launch submits the op's payload to the shared
+    worker set, a revoke cancels the payload future before it starts,
+    and a completion collects it.  Every method is a no-op by default
+    and the pool never behaves differently for having an observer — the
+    sim timeline stays bit-for-bit the unobserved one (the observer
+    sees decisions; it does not make them)."""
+
+    def on_launch(self, key: NodeKey, sched: ScheduledOp) -> None:
+        pass
+
+    def on_revoke(self, key: NodeKey, sched: ScheduledOp) -> None:
+        pass
+
+    def on_complete(self, key: NodeKey, sched: ScheduledOp) -> None:
+        pass
 
 
 class _PoolSim:
@@ -138,6 +198,7 @@ class _PoolSim:
 
     def __init__(self) -> None:
         self.clock = 0.0
+        self.observer: PoolObserver | None = None
         self.graphs: dict[int, OpGraph] = {}
         self.jobs: dict[int, Job] = {}              # jid -> admitted job
         self.pending: dict[int, dict[int, int]] = {}
@@ -191,6 +252,8 @@ class _PoolSim:
         self._live_seq[key] = seq
         heapq.heappush(self.heap, (sched.finish, seq, key))
         self.events.append((self.clock, len(self.running)))
+        if self.observer is not None:
+            self.observer.on_launch(key, sched)
 
     def revoke(self, key: NodeKey) -> ScheduledOp:
         """Preempt a running launch: the node goes back to its job's ready
@@ -207,6 +270,8 @@ class _PoolSim:
             dataclasses.replace(sched, finish=self.clock))
         self.jobs[key[0]].preemptions += 1
         self.events.append((self.clock, len(self.running)))
+        if self.observer is not None:
+            self.observer.on_revoke(key, sched)
         return sched
 
     def next_finish(self) -> float | None:
@@ -246,7 +311,33 @@ class _PoolSim:
                 if n == 0:
                     self.ready[jid].append(u)
         self.events.append((self.clock, len(self.running)))
+        if self.observer is not None:
+            self.observer.on_complete(key, sched)
         return jid, sched
+
+    def drop_job(self, jid: int) -> list[ScheduledOp]:
+        """Remove one tenant from the event loop (job cancellation).
+
+        Running launches are lazily cancelled exactly like ``revoke`` —
+        the observer's ``on_revoke`` fires so a payload backend cancels
+        the futures — but they do NOT count as preemptions or return to
+        a ready frontier: the tenant is leaving, not restarting.  The
+        job's completed records/partials stay behind for accounting (the
+        work really ran); only its scheduling state goes.  Launch-time
+        service charges stay on the cancelled tenant's ledger — the pool
+        priced those cores out to it, and a cancel does not retroactively
+        make them free."""
+        dropped = []
+        for key in [k for k in self.running if k[0] == jid]:
+            sched = self.running.pop(key)
+            self._cancelled.add(self._live_seq.pop(key))
+            dropped.append(sched)
+            if self.observer is not None:
+                self.observer.on_revoke(key, sched)
+        for d in (self.graphs, self.jobs, self.pending, self.ready):
+            d.pop(jid, None)
+        self.events.append((self.clock, len(self.running)))
+        return dropped
 
     def job_done(self, jid: int) -> bool:
         return (not self.ready[jid]
@@ -597,7 +688,9 @@ class RuntimePool:
     def __init__(self, machine: SimMachine | None = None,
                  config: PoolConfig | None = None,
                  plan_cache: PlanCache | None = None,
-                 profile_machine: SimMachine | None = None):
+                 profile_machine: SimMachine | None = None,
+                 corrections: CorrectionTable | None = None,
+                 trip_counts: TripCountEstimator | None = None):
         self.machine = machine or SimMachine()
         self.config = config or PoolConfig()
         # profiling may run on a DIFFERENT timing context than execution
@@ -621,19 +714,32 @@ class RuntimePool:
         self.feedback = strat.feedback
         self.sink = strat.sink
         self._preemption = strat.preemption
-        self.corrections = (CorrectionTable()
-                            if self.feedback != "off" else None)
+        # seeded tables let a service daemon restart into the learned
+        # state it persisted (see repro.service) instead of cold tables
+        self.corrections = (
+            (corrections if corrections is not None else CorrectionTable())
+            if self.feedback != "off" else None)
         # ONE trip-count estimator spans every tenant too (keyed by
         # region key): the second tenant running the same loop starts
         # with the learned trip count instead of its build-time prior
-        self.trip_counts = (TripCountEstimator()
-                            if self.feedback != "off" else None)
+        self.trip_counts = (
+            (trip_counts if trip_counts is not None
+             else TripCountEstimator())
+            if self.feedback != "off" else None)
         # (corrections.observed, trip_counts.observed) at last refresh
         self._refreshed_at = (0, 0)
         # region shape-change counters of the CURRENT run (reset by run())
         self._region_counts = {"expand": 0, "resolve": 0}
         self.jobs: list[Job] = []
         self._jid = itertools.count()
+        # execution-backend hooks mirrored onto the sim at begin();
+        # None = pure simulation, zero overhead
+        self.observer: PoolObserver | None = None
+        # live lifecycle state (begin()/step()/result()); run() is the
+        # one-shot convenience over these
+        self._sim: _PoolSim | None = None
+        self._active: list[Job] = []
+        self._adapter: _PoolAdapter | None = None
 
     # ---- profiling (amortized through the shared PlanCache) ------------
     def _profile_job(self, job: Job, cache: PlanCache | None) -> None:
@@ -684,6 +790,12 @@ class RuntimePool:
                       "cache_hits": after["hits"] - before["hits"]}))
         self.jobs.append(job)
         self.queue.submit(job)
+        # mid-lifecycle submission (the service daemon's path): give the
+        # arrival its admission decision at the CURRENT instant, exactly
+        # as begin()'s initial pass would have — step()'s idle branch only
+        # handles strictly-future arrivals
+        if self._sim is not None:
+            self._admit(self._sim, self._active)
         return job
 
     def _refresh_waiting_estimates(self) -> None:
@@ -908,67 +1020,96 @@ class RuntimePool:
                 wake = exp
         return wake
 
-    def run(self) -> PoolResult:
+    # ---- lifecycle: begin / step / result -------------------------------
+    # run() used to be one monolithic while-loop; the service daemon needs
+    # to pump the SAME loop one decision instant at a time (checkpointing
+    # between instants, accepting submissions/cancels while work is in
+    # flight), so the loop body lives in step() and run() is the one-shot
+    # composition.  run() remains bit-for-bit the old loop: begin() is the
+    # old prologue, step() the old body, result() the old epilogue.
+
+    def begin(self, *, clock: float = 0.0) -> None:
+        """Start a pool lifecycle: fresh event sim (optionally resuming at
+        a checkpointed ``clock`` — the daemon's crash-recovery path),
+        frozen interference blacklist, initial admission pass."""
         sim = _PoolSim()
-        active: list[Job] = []
+        sim.clock = clock
+        sim.observer = self.observer
+        self._sim = sim
+        self._active = []
         # ONE launch fixpoint loop for both schedulers: the shared core's
         # drain handles S3/fallback/S4 gating (S3 off means serial
         # launches only; the serial baseline honors the flag too, so
         # comparisons stay apples-to-apples)
-        adapter = self.scheduler.adapter(sim)
-        core = self.scheduler.core
+        self._adapter = self.scheduler.adapter(sim)
         self._region_counts = {"expand": 0, "resolve": 0}
         # freeze the cross-job interference blacklist for this pool run
         # (pairs recorded during the run bite on the next one)
-        core.begin_run()
-        self._admit(sim, active)
-        while active or len(self.queue):
-            if not active:
-                # idle until the next tenant arrives
-                nxt = self.queue.next_arrival(sim.clock)
-                assert nxt is not None, "queued jobs but none admissible"
-                sim.clock = nxt
+        self.scheduler.core.begin_run()
+        self._admit(sim, self._active)
+
+    def step(self) -> bool:
+        """Advance the pool by ONE decision instant (the old run() loop
+        body, verbatim).  Returns False — without advancing anything —
+        once no admitted or queued work remains; new submissions make it
+        return True again, which is how the daemon idles."""
+        assert self._sim is not None, "step() before begin()"
+        sim, active, adapter = self._sim, self._active, self._adapter
+        if not active and not len(self.queue):
+            return False
+        if not active:
+            # idle until the next tenant arrives
+            nxt = self.queue.next_arrival(sim.clock)
+            assert nxt is not None, "queued jobs but none admissible"
+            sim.clock = nxt
+            self._admit(sim, active)
+            return True
+        self.scheduler.core.drain(adapter)
+        if sim.running:
+            nxt_fin = sim.next_finish()
+            assert nxt_fin is not None
+            # a tenant arriving before the next op completes must not
+            # wait out that op: advance to the arrival, admit, and go
+            # back to launching on whatever cores are idle.  Only wake
+            # for arrivals the admission tier would actually accept —
+            # an arrival the demand cap bounces is not a scheduling
+            # instant (it used to wake on max_active alone), but a
+            # LATER admissible arrival behind it still gets its own
+            # instant (next_admissible_arrival scans past the blocked
+            # one).  Slack expiries (preemption armed) fold into the
+            # same min — see _next_decision_instant.
+            wake = self._next_decision_instant(sim, active, nxt_fin)
+            if wake is not None:
+                sim.clock = wake
                 self._admit(sim, active)
-                continue
-            core.drain(adapter)
-            if sim.running:
-                nxt_fin = sim.next_finish()
-                assert nxt_fin is not None
-                # a tenant arriving before the next op completes must not
-                # wait out that op: advance to the arrival, admit, and go
-                # back to launching on whatever cores are idle.  Only wake
-                # for arrivals the admission tier would actually accept —
-                # an arrival the demand cap bounces is not a scheduling
-                # instant (it used to wake on max_active alone), but a
-                # LATER admissible arrival behind it still gets its own
-                # instant (next_admissible_arrival scans past the blocked
-                # one).  Slack expiries (preemption armed) fold into the
-                # same min — see _next_decision_instant.
-                wake = self._next_decision_instant(sim, active, nxt_fin)
-                if wake is not None:
-                    sim.clock = wake
-                    self._admit(sim, active)
-                    continue
-                jid, sched = sim.complete_next()
-                # close the loop: the completion's observed service flows
-                # back through the job's plan store (no-op under
-                # feedback="off"; under "ewma" it also re-derives the
-                # job's remaining demand and critical paths, so the
-                # admission check below sees the tightened values)
-                adapter.observe((jid, sched.op.uid), sched, OBS_FINISH,
-                                sched.duration)
-                # region shape changes at this completion: trace, learn
-                # trip counts, re-price the job's demand/slack (early
-                # exit frees demand -> the _admit below can wake blocked
-                # arrivals; overrun shrinks slack -> the next decision
-                # instant can trigger preemption/eviction)
-                self._handle_region_events(sim)
-                job = next(j for j in active if j.jid == jid)
-                job.ops_done += 1
-                if sim.job_done(jid):
-                    job.finish_time = sim.clock
-                    active.remove(job)
-                self._admit(sim, active)
+                return True
+            jid, sched = sim.complete_next()
+            # close the loop: the completion's observed service flows
+            # back through the job's plan store (no-op under
+            # feedback="off"; under "ewma" it also re-derives the
+            # job's remaining demand and critical paths, so the
+            # admission check below sees the tightened values)
+            adapter.observe((jid, sched.op.uid), sched, OBS_FINISH,
+                            sched.duration)
+            # region shape changes at this completion: trace, learn
+            # trip counts, re-price the job's demand/slack (early
+            # exit frees demand -> the _admit below can wake blocked
+            # arrivals; overrun shrinks slack -> the next decision
+            # instant can trigger preemption/eviction)
+            self._handle_region_events(sim)
+            job = next(j for j in active if j.jid == jid)
+            job.ops_done += 1
+            if sim.job_done(jid):
+                job.finish_time = sim.clock
+                active.remove(job)
+            self._admit(sim, active)
+        return True
+
+    def result(self) -> PoolResult:
+        """Snapshot the lifecycle's result — callable mid-run (the daemon
+        reports drained metrics from the same call)."""
+        sim = self._sim
+        assert sim is not None, "result() before begin()"
         result = PoolResult(makespan=sim.clock, jobs=list(self.jobs),
                             records=sim.records, events=sim.events,
                             cache_stats=self.plan_cache.stats(),
@@ -984,6 +1125,52 @@ class RuntimePool:
             cache_stats=result.cache_stats,
             corrections=self.corrections).snapshot()
         return result
+
+    def run(self) -> PoolResult:
+        self.begin()
+        while self.step():
+            pass
+        result = self.result()
+        # one-shot mode: leave the pool "not begun" again, so a later
+        # submit() queues normally instead of admitting into a dead sim
+        self._sim = None
+        self._adapter = None
+        self._active = []
+        return result
+
+    # ---- cancellation ---------------------------------------------------
+    def cancel(self, jid: int) -> bool:
+        """Cancel a job wherever it lives: waiting in the admission queue,
+        admitted but launch-free, or with running launches (those are
+        revoked through the observer seam, so a payload backend cancels
+        the futures).  Returns True when the job was live and is now
+        cancelled; unknown, finished, or already-cancelled jobs return
+        False.  Completed work stays in the records (it really ran) and
+        launch-time service charges stay on the tenant's ledger."""
+        job = next((j for j in self.jobs if j.jid == jid), None)
+        if job is None or job.cancelled or job.done:
+            return False
+        where = None
+        if self.queue.remove(jid):
+            where = "queued"
+        elif self._sim is not None and jid in self._sim.jobs:
+            self._sim.drop_job(jid)
+            self._active[:] = [j for j in self._active if j.jid != jid]
+            where = "admitted"
+            # the freed slot (and freed demand) gets its admission
+            # decision NOW — step()'s idle branch only handles
+            # strictly-future arrivals
+            self._admit(self._sim, self._active)
+        if where is None:
+            return False
+        job.cancelled = True
+        if self.sink.enabled:
+            now = self._sim.clock if self._sim is not None else 0.0
+            self.sink.emit(TraceEvent(
+                ts=now, family=FAM_ADMISSION, kind="cancel", key=jid,
+                data={"job": job.name, "where": where,
+                      "ops_done": job.ops_done}))
+        return True
 
     # ---- baseline -------------------------------------------------------
     def run_serial(self, *, share_cache: bool = False) -> SerialResult:

@@ -14,13 +14,14 @@ from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                slowdown_metrics)
 from repro.obs.perfetto import export_pool_trace, pool_trace, write_trace
 from repro.obs.trace import (FAM_ADMISSION, FAM_PLACEMENT, FAM_PLANSTORE,
-                             FAM_PREEMPTION, FAM_REGION, FAM_STRATEGY, FAMILIES,
-                             NULL_SINK, NullSink, RecordingSink, TraceEvent,
-                             TraceSink)
+                             FAM_PREEMPTION, FAM_REGION, FAM_SERVICE,
+                             FAM_STRATEGY, FAMILIES, NULL_SINK, NullSink,
+                             RecordingSink, TraceEvent, TraceSink)
 
 __all__ = [
     "FAM_ADMISSION", "FAM_PLACEMENT", "FAM_PLANSTORE", "FAM_PREEMPTION",
-    "FAM_REGION", "FAM_STRATEGY", "FAMILIES", "NULL_SINK", "NullSink",
+    "FAM_REGION", "FAM_SERVICE",
+    "FAM_STRATEGY", "FAMILIES", "NULL_SINK", "NullSink",
     "RecordingSink",
     "TraceEvent", "TraceSink",
     "Counter", "Gauge", "Histogram", "MetricsRegistry",

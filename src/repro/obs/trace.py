@@ -42,16 +42,21 @@ import abc
 import dataclasses
 from typing import Any, Hashable, Mapping
 
-# the five decision-event families (see module docstring)
+# the decision-event families (see module docstring)
 FAM_ADMISSION = "admission"
 FAM_STRATEGY = "strategy"
 FAM_PLACEMENT = "placement"
 FAM_PREEMPTION = "preemption"
 FAM_PLANSTORE = "planstore"
 FAM_REGION = "region"       # dynamic control flow: expand/resolve instants
+# service-daemon lifecycle (repro.service): start / recover / recover_job
+# / submit / cancel / checkpoint / drain / stop — the daemon emits its
+# lifecycle into the same seam the schedulers use, per the ROADMAP's
+# no-private-logging rule
+FAM_SERVICE = "service"
 
 FAMILIES = (FAM_ADMISSION, FAM_STRATEGY, FAM_PLACEMENT, FAM_PREEMPTION,
-            FAM_PLANSTORE, FAM_REGION)
+            FAM_PLANSTORE, FAM_REGION, FAM_SERVICE)
 
 
 @dataclasses.dataclass(frozen=True)

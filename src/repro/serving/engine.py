@@ -204,17 +204,19 @@ class ServeEngine:
         target, which is what arms the pool's slack-aware ordering and
         (when enabled) deadline-driven preemption for these jobs.  Returns
         the created jobs; the engine's real-JAX queue is left untouched."""
+        from repro.service.spec import ATTACHED_GRAPH, JobSpec, submit_spec
         jobs = []
         for i, wave in enumerate(self.pending_waves()):
             g = wave_op_graph(self.cfg, wave, n_slots=self.n_slots,
                               name=f"{self.cfg.arch_id}-wave{i}")
-            submit_time = i * arrival_gap
-            deadline = (submit_time + latency_target
-                        if latency_target is not None else None)
-            jobs.append(pool.submit(g, priority=priority,
-                                    name=g.name,
-                                    submit_time=submit_time,
-                                    deadline=deadline))
+            # same wire schema as the CLI and the daemon inbox; the
+            # wave's graph only exists in-process, so it rides along as
+            # an attached graph rather than a rebuildable workload name
+            spec = JobSpec(workload=ATTACHED_GRAPH, name=g.name,
+                           priority=priority,
+                           submit_time=i * arrival_gap,
+                           latency_budget=latency_target)
+            jobs.append(submit_spec(pool, spec, graph=g))
         return jobs
 
 

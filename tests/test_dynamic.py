@@ -41,7 +41,8 @@ from repro.core.graph import (DynamicGraphBuilder, DynamicOpGraph,
 from repro.core.planstore import TripCountEstimator
 from repro.multitenant import (PoolConfig, RuntimePool, compare_timelines,
                                corun_timeline, timeline_rows)
-from repro.obs import FAM_REGION, FAMILIES, RecordingSink, metrics_from_events
+from repro.obs import (FAM_REGION, FAM_SERVICE, FAMILIES, RecordingSink,
+                       metrics_from_events)
 
 
 @pytest.fixture(scope="module")
@@ -400,7 +401,9 @@ class TestDynamicPool:
                         submit_time=submit,
                         deadline=(submit + 0.002 if i % 2 else None))
         pool.run()
-        assert sink.families() == set(FAMILIES)
+        # every family except the daemon-only service lifecycle (that
+        # one fires from PoolDaemon — covered in tests/test_service.py)
+        assert sink.families() == set(FAMILIES) - {FAM_SERVICE}
 
 
 # ---------------------------------------------------------------------------

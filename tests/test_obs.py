@@ -25,10 +25,11 @@ from repro.multitenant import (PoolConfig, PreemptionPolicy, RuntimePool,
                                check_parity, compare_timelines,
                                timeline_rows)
 from repro.obs import (FAM_ADMISSION, FAM_PLACEMENT, FAM_PLANSTORE,
-                       FAM_PREEMPTION, FAM_REGION, FAM_STRATEGY, FAMILIES,
-                       NULL_SINK, MetricsRegistry, NullSink, RecordingSink,
-                       TraceEvent, configure_logging, get_logger,
-                       metrics_from_events, pool_trace, write_trace)
+                       FAM_PREEMPTION, FAM_REGION, FAM_SERVICE, FAM_STRATEGY,
+                       FAMILIES, NULL_SINK, MetricsRegistry, NullSink,
+                       RecordingSink, TraceEvent, configure_logging,
+                       get_logger, metrics_from_events, pool_trace,
+                       write_trace)
 
 MIX = [("resnet50", 1.0), ("dcgan", 1.0), ("resnet50", 2.0), ("dcgan", 1.0)]
 
@@ -130,10 +131,11 @@ class TestTraceInertness:
 class TestEventStream:
     def test_all_static_families_fire_on_the_armed_mix(self, traced_mix):
         # FAM_REGION only fires on dynamic graphs (tests/test_dynamic.py
-        # covers the all-six case); the armed STATIC mix must fire the
-        # other five and nothing else
+        # covers that) and FAM_SERVICE only from the pool daemon
+        # (tests/test_service.py); the armed STATIC mix must fire the
+        # remaining five and nothing else
         _, _, sink = traced_mix
-        assert sink.families() == set(FAMILIES) - {FAM_REGION}
+        assert sink.families() == set(FAMILIES) - {FAM_REGION, FAM_SERVICE}
 
     def test_events_carry_causes_and_inputs(self, traced_mix):
         _, _, sink = traced_mix
@@ -243,7 +245,7 @@ class TestPerfettoExport:
         assert pids == {1, 2, 3, 4}
         decision_cats = {e["cat"] for e in events
                          if e["ph"] == "i" and e["pid"] == 4}
-        assert decision_cats == set(FAMILIES) - {FAM_REGION}
+        assert decision_cats == set(FAMILIES) - {FAM_REGION, FAM_SERVICE}
         counter_names = {e["name"] for e in events if e["ph"] == "C"}
         assert {"co_running", "queue_depth",
                 "bw_share_demand"} <= counter_names
