@@ -34,14 +34,14 @@ def run_parity_check() -> None:
 
 
 def main() -> None:
-    from benchmarks import dynamic_bench, economics_bench, feedback_bench, \
-        kernel_bench, multitenant_bench, numa_bench, paper_tables, \
-        preemption_bench, roofline
+    from benchmarks import cluster_bench, dynamic_bench, economics_bench, \
+        feedback_bench, kernel_bench, multitenant_bench, numa_bench, \
+        paper_tables, preemption_bench, roofline
     fns = (list(paper_tables.ALL) + list(kernel_bench.ALL)
            + list(roofline.ALL) + list(multitenant_bench.ALL)
            + list(preemption_bench.ALL) + list(economics_bench.ALL)
            + list(numa_bench.ALL) + list(feedback_bench.ALL)
-           + list(dynamic_bench.ALL))
+           + list(dynamic_bench.ALL) + list(cluster_bench.ALL))
     argv = sys.argv[1:]
     trace_out = None
     if "--trace-out" in argv:

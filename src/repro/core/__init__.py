@@ -29,9 +29,10 @@ from repro.core.perfmodel import (
     paper_case_lists, power_of_two_cases, REGRESSORS)
 from repro.core.concurrency import ConcurrencyController, ConcurrencyPlan, OpPlan
 from repro.core.planstore import (
-    AdaptivePlanStore, CorrectionTable, FrozenPlanStore, OpObservation,
+    AdaptivePlanStore, CorrectionTable, DemandIndex, FrozenPlanStore,
+    MovePrice, OpObservation,
     PlanStore, TripCountEstimator, FEEDBACK_MODES, OBS_FINISH, OBS_LAUNCH,
-    OBS_REVOKE, critical_path_from, make_plan_store)
+    OBS_REVOKE, critical_path_from, make_plan_store, split_price)
 from repro.core.strategy import (
     PreemptionPolicy, StrategyAdapter, StrategyConfig, StrategyCore,
     free_cores, pick_admissible, remaining_horizon)
@@ -56,10 +57,10 @@ __all__ = [
     "RegressionSuite",
     "paper_case_lists", "power_of_two_cases", "REGRESSORS",
     "ConcurrencyController", "ConcurrencyPlan", "OpPlan",
-    "AdaptivePlanStore", "CorrectionTable", "FrozenPlanStore",
-    "OpObservation", "PlanStore", "FEEDBACK_MODES",
+    "AdaptivePlanStore", "CorrectionTable", "DemandIndex", "FrozenPlanStore",
+    "MovePrice", "OpObservation", "PlanStore", "FEEDBACK_MODES",
     "OBS_FINISH", "OBS_LAUNCH", "OBS_REVOKE",
-    "critical_path_from", "make_plan_store",
+    "critical_path_from", "make_plan_store", "split_price",
     "PreemptionPolicy", "StrategyAdapter", "StrategyConfig", "StrategyCore",
     "free_cores", "pick_admissible", "remaining_horizon",
     "CorunScheduler", "ScheduleResult", "ScheduledOp",

@@ -158,6 +158,77 @@ def migration_price(remaining: float, relaunch_time: float, elapsed: float,
                      cost=elapsed * restart_waste)
 
 
+def split_price(whole_time: float, split_time: float, transfer_cost: float,
+                restart_cost_s: float = 0.0) -> MovePrice:
+    """Cross-machine split/move, priced in seconds of the tenant's own
+    makespan: spanning a second machine is worth it only when the
+    predicted parallel finish strictly undercuts staying put PLUS the
+    modeled working-set transfer and any restart waste of already-started
+    work.  Same strict-inequality discipline as every other priced move:
+    a split that merely breaks even stays on one machine."""
+    return MovePrice(gain=max(0.0, whole_time - split_time),
+                     cost=transfer_cost + restart_cost_s)
+
+
+# ---------------------------------------------------------------------------
+# demand queries per machine fingerprint — the cluster-routing currency
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DemandIndex:
+    """Memoized demand (core-seconds) estimates keyed by
+    ``(machine fingerprint, workload key)``.
+
+    The cluster router bin-packs jobs against per-machine free capacity,
+    which on a heterogeneous cluster means re-estimating every arriving
+    job's demand under EACH candidate machine's cost model.  A full
+    re-profile per (job, machine) pair would be absurdly expensive, but
+    demand is a pure function of (workload shape, machine fingerprint):
+    training jobs repeat a handful of step-graph shapes, so the first
+    estimate per pair is authoritative for every later arrival of the
+    same shape.  Estimates are keyed by the same canonical fingerprint
+    reprs the ``PlanCache`` namespaces curves under — the two caches
+    agree about what "the same machine" means."""
+
+    values: dict = dataclasses.field(default_factory=dict)
+    hits: int = 0
+    misses: int = 0
+
+    @staticmethod
+    def workload_key(graph) -> tuple:
+        """Canonical shape key of a graph: the sorted multiset of its
+        per-op cross-graph keys.  Two independently built graphs with the
+        same op population have the same demand on the same machine."""
+        from repro.core.perfmodel import cross_graph_key
+        return tuple(sorted(map(repr, (cross_graph_key(op)
+                                       for op in graph.ops.values()))))
+
+    def query(self, fingerprint, graph, compute) -> float:
+        """Demand of ``graph`` on the machine ``fingerprint`` — memoized;
+        ``compute()`` (profile + ``remaining_demand`` under that
+        machine's planstore) runs only on the first miss per pair."""
+        key = (repr(fingerprint), self.workload_key(graph))
+        if key in self.values:
+            self.hits += 1
+            return self.values[key]
+        self.misses += 1
+        value = float(compute())
+        self.values[key] = value
+        return value
+
+    def peek(self, fingerprint, graph, *,
+             count: bool = False) -> float | None:
+        """Memoized demand if present, without computing (used by the
+        router's capacity projections, which must never trigger a
+        profile).  ``count=True`` bills a found value as a hit — the
+        router's facts pass sets it so reuse shows up in the stats;
+        existence probes leave the counters alone."""
+        v = self.values.get((repr(fingerprint), self.workload_key(graph)))
+        if count and v is not None:
+            self.hits += 1
+        return v
+
+
 class PlanStore(abc.ABC):
     """Every prediction a scheduler consumes and every completion it
     produces, through one interface (see module docstring)."""

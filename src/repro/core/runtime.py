@@ -20,6 +20,7 @@ Two executors:
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
 
@@ -290,6 +291,19 @@ def report_payload_observation(store: PlanStore, plan: ConcurrencyPlan | None,
         predicted=predicted, observed=dt, kind=OBS_FINISH))
 
 
+def _request_host_devices(n: int) -> None:
+    """Ask XLA for ``n`` host-platform devices.  Appends the flag to
+    ``XLA_FLAGS`` unless a device count is already pinned there (the
+    launch tools set 512 at import; respect any explicit choice).  A
+    no-op on an already-initialized jax — the count is locked at first
+    init, and ``device_for`` round-robins over whatever jax granted."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" in flags:
+        return
+    flag = f"--xla_force_host_platform_device_count={n}"
+    os.environ["XLA_FLAGS"] = f"{flags} {flag}".strip()
+
+
 class RealGraphExecutor:
     """Dependency-ordered execution of op payloads on a worker pool.
 
@@ -314,22 +328,54 @@ class RealGraphExecutor:
     cancelled before any payload runs.  Deadlock-free because payloads
     are only submitted in dependency order (the pool launches an op only
     after its deps completed), so every queued task waits only on
-    strictly earlier submissions."""
+    strictly earlier submissions.
 
-    def __init__(self, max_workers: int = 2, *, persistent: bool = False):
+    ``n_devices`` maps the cluster daemon's simulated machines onto
+    DISTINCT host JAX devices: it requests that many host-platform XLA
+    devices (``--xla_force_host_platform_device_count``, which only
+    takes effect if set before jax's first initialization — jax locks
+    the device count then) and ``device_for(machine)`` returns the
+    device a machine's payloads should land on.  Payload execution and
+    the device mapping degrade gracefully without jax: ``device_for``
+    returns None and payloads run unpinned."""
+
+    def __init__(self, max_workers: int = 2, *, persistent: bool = False,
+                 n_devices: int | None = None):
         self.max_workers = max_workers
+        self.n_devices = n_devices
+        self._devices: tuple | None = None     # resolved lazily
+        if n_devices is not None and n_devices > 1:
+            _request_host_devices(n_devices)
         self._pool: ThreadPoolExecutor | None = (
             ThreadPoolExecutor(max_workers=max_workers)
             if persistent else None)
 
     # ---- persistent (service-daemon) mode ------------------------------
-    def submit_op(self, op, deps: dict[int, object]) -> Future:
+    def device_for(self, machine: int | None):
+        """The host JAX device simulated machine ``machine`` maps to
+        (round-robin when jax granted fewer devices than machines; None
+        when unmapped, jax-less, or ``n_devices`` was never set)."""
+        if machine is None or self.n_devices is None:
+            return None
+        if self._devices is None:
+            try:
+                import jax
+                self._devices = tuple(jax.devices("cpu"))
+            except Exception:  # noqa: BLE001 - jax-less: run unpinned
+                self._devices = ()
+        if not self._devices:
+            return None
+        return self._devices[machine % len(self._devices)]
+
+    def submit_op(self, op, deps: dict[int, object],
+                  device=None) -> Future:
         """Submit one op's payload to the persistent worker set.
 
         ``deps`` maps dep uid -> either the dep's ``Future`` (resolved
         inside the worker) or an already-materialized value (ops without
-        payloads produce ``None`` directly).  Returns a future of
-        ``(result, wall_seconds)``."""
+        payloads produce ``None`` directly).  ``device`` (from
+        ``device_for``) pins the payload's jax computations to one host
+        device.  Returns a future of ``(result, wall_seconds)``."""
         assert self._pool is not None, "submit_op needs persistent=True"
 
         def call() -> tuple[object, float]:
@@ -337,7 +383,12 @@ class RealGraphExecutor:
             vals = {u: (f.result()[0] if isinstance(f, Future) else f)
                     for u, f in deps.items()}
             ts = time.perf_counter()
-            out = op.payload(vals) if op.payload else None
+            if device is not None:
+                import jax
+                with jax.default_device(device):
+                    out = op.payload(vals) if op.payload else None
+            else:
+                out = op.payload(vals) if op.payload else None
             return out, time.perf_counter() - ts
 
         return self._pool.submit(call)

@@ -1,7 +1,8 @@
-from repro.hw.spec import V5E, KNL, TpuV5eSpec, KnlLikeSpec, dominant_term
+from repro.hw.spec import (V5E, KNL, ClusterSpec, TpuV5eSpec, KnlLikeSpec,
+                           dominant_term)
 from repro.hw.hlo import parse_collectives, op_histogram, shape_bytes, CollectiveStats
 
 __all__ = [
-    "V5E", "KNL", "TpuV5eSpec", "KnlLikeSpec", "dominant_term",
+    "V5E", "KNL", "ClusterSpec", "TpuV5eSpec", "KnlLikeSpec", "dominant_term",
     "parse_collectives", "op_histogram", "shape_bytes", "CollectiveStats",
 ]

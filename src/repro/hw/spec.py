@@ -148,6 +148,45 @@ V5E = TpuV5eSpec()
 KNL = KnlLikeSpec()
 
 
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """N (possibly heterogeneous) KNL-like machines behind one placement
+    layer (``repro.cluster``).
+
+    The cluster model is shared-nothing: machines exchange no memory or
+    bandwidth, only JOBS move between them — so each machine keeps its
+    own ``KnlLikeSpec`` cost oracle and the cluster layer is pure
+    routing.  ``transfer_cost_s`` is the modeled wall-clock price of
+    moving one job's working set between machines; the router charges it
+    (plus restart waste) through ``MovePrice`` before any cross-machine
+    split or migration of started work, mirroring how the preemption
+    economics price every other move in the stack."""
+
+    machines: tuple[KnlLikeSpec, ...] = (KNL,)
+    name: str = "cluster"
+    transfer_cost_s: float = 0.5e-3       # per-job cross-machine move price
+
+    def __post_init__(self):
+        if not self.machines:
+            raise ValueError("ClusterSpec needs at least one machine")
+
+    @classmethod
+    def homogeneous(cls, n: int, spec: KnlLikeSpec = KNL,
+                    **kwargs) -> "ClusterSpec":
+        return cls(machines=tuple(spec for _ in range(n)), **kwargs)
+
+    @property
+    def n_machines(self) -> int:
+        return len(self.machines)
+
+    @property
+    def total_cores(self) -> int:
+        return sum(m.cores for m in self.machines)
+
+    def __len__(self) -> int:
+        return len(self.machines)
+
+
 def dominant_term(compute_s: float, memory_s: float, collective_s: float) -> str:
     terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
     return max(terms, key=terms.get)

@@ -96,6 +96,27 @@ def pool_timeline(graph: OpGraph, machine: SimMachine | None = None,
     return res.per_job_schedule(job.jid)
 
 
+def cluster_timeline(graph: OpGraph, machine: SimMachine | None = None,
+                     config: RuntimeConfig | None = None) -> ScheduleResult:
+    """The same graph as the only tenant of a ONE-MACHINE ClusterPool.
+
+    The cluster layer (router, demand index, rebalance check, shared jid
+    space) must be bit-for-bit inert when there is nothing to route
+    between: a 1-machine cluster IS the single-machine pool."""
+    # function-local for the same layering reason as service_timeline:
+    # the cluster package imports multitenant modules
+    from repro.cluster import ClusterPool
+    from repro.hw.spec import ClusterSpec
+
+    machine = machine or SimMachine()
+    pool = ClusterPool(ClusterSpec(machines=(machine.spec,)),
+                       config=PoolConfig(max_active=1,
+                                         runtime=config or RuntimeConfig()),
+                       machines=[machine])
+    job = pool.submit(graph)
+    return pool.run().per_job_schedule(job.jid)
+
+
 def service_timeline(model: str, machine: SimMachine | None = None,
                      config: RuntimeConfig | None = None, *,
                      scale: int = 1) -> ScheduleResult:
@@ -154,7 +175,7 @@ def check_parity(models: Iterable[str] = ("resnet50", "dcgan"), *,
     """Pool-vs-corun parity over paper-zoo models, plus the closed-loop
     zero-error leg and the trace-inertness leg.
 
-    Per model, EIGHT pool/corun timelines must agree bitwise with the
+    Per model, NINE pool/corun timelines must agree bitwise with the
     single-graph ``feedback="off"`` reference: the single-job pool (the
     strategy-core differential), a single-job pool with a live
     ``RecordingSink`` (the observability lock — tracing must be
@@ -167,10 +188,12 @@ def check_parity(models: Iterable[str] = ("resnet50", "dcgan"), *,
     blend-math lock — an exact observation may not move any prediction),
     both schedulers run on the same ops wrapped in a ``DynamicOpGraph``
     with ZERO regions (the dynamic-control-flow lock — the region
-    machinery must be bit-for-bit inert on static graphs), and a
+    machinery must be bit-for-bit inert on static graphs), a
     submit-all-then-drain run through the pool DAEMON (the service lock
     — checkpointing, the job store, and the payload-observer seam must
-    not perturb the timeline).
+    not perturb the timeline), and a ONE-MACHINE ClusterPool run (the
+    cluster lock — routing, demand pricing, and the rebalance check must
+    be inert with nothing to route between).
 
     Returns ``{"ok": bool, "models": {name: {"ok", "makespan",
     "divergences"}}}``.  Uses equal-seeded machines (the sim machine is a
@@ -216,6 +239,10 @@ def check_parity(models: Iterable[str] = ("resnet50", "dcgan"), *,
             # must reproduce the library pool bit-for-bit
             "service-once": service_timeline(
                 model, SimMachine(seed=seed), config, scale=scale),
+            # a 1-machine cluster IS the pool: the placement layer must
+            # add nothing to the timeline until there is a second machine
+            "cluster-1m": cluster_timeline(graph, SimMachine(seed=seed),
+                                           config),
         }
         divs: list[str] = []
         if not sink.events:

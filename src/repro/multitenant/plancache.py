@@ -21,10 +21,19 @@ Persistence: the cache is the curve BACKEND of the closed-loop plan API
 (``repro.core.planstore``), and curves measure the machine — so they are
 worth keeping across process restarts.  ``dump(path)``/``load(path)``
 serialize the full cache state (curves, LRU recency order, hit/probe/
-eviction accounting, the machine-fingerprint binding) as versioned JSON.
-A corrupted, truncated, or version-mismatched file degrades to an empty
-cache with a warning — a cold cache re-measures, a wrong curve would
-mis-schedule silently, so load NEVER guesses.
+eviction accounting, per-entry machine-fingerprint namespaces) as
+versioned JSON.  A corrupted, truncated, or version-mismatched file
+degrades to an empty cache with a warning — a cold cache re-measures, a
+wrong curve would mis-schedule silently, so load NEVER guesses.
+
+Machine binding: curves measure a (machine, probe-interval) context, so
+every lookup/insert is namespaced under the fingerprint most recently
+passed to ``bind_machine``.  One cache (and one cache FILE) can therefore
+serve a heterogeneous cluster: machine A's curves can never answer
+machine B's lookups, while two pools on identical machines share hits.
+Binding used to be whole-cache (first binder wins, mismatch raised) —
+that made cross-machine sharing impossible and, worse, was only compared
+at dump/load, so lookups themselves were never actually guarded.
 """
 
 from __future__ import annotations
@@ -42,7 +51,10 @@ from repro.obs.log import get_logger
 logger = get_logger(__name__)
 
 # bump whenever the on-disk layout changes; load() refuses other versions
-SCHEMA_VERSION = 1
+# (v2 added per-entry fingerprint namespaces; v1 files are still read,
+# with their entries placed under the file's whole-cache fingerprint)
+SCHEMA_VERSION = 2
+_LEGACY_SCHEMA_VERSIONS = (1,)
 
 
 def atomic_write_text(path: str | pathlib.Path, text: str) -> None:
@@ -127,52 +139,61 @@ class PlanCache:
     probes_saved: int = 0       # probes a hit avoided re-paying
     evictions: int = 0          # LRU evictions (bounded caches only)
     probes_evicted: int = 0     # probes paid for curves later evicted
+    # the profiling context (machine fingerprint + probe interval) whose
+    # namespace lookups/inserts currently resolve under; None = the bare
+    # un-namespaced keyspace (direct CurveCache use outside a runtime)
     machine_fingerprint: Hashable | None = None
-    # repr of the fingerprint this cache was PERSISTED under (a loaded
-    # cache can't reconstruct the live tuple — spec objects don't survive
-    # JSON — so the binding check compares canonical reprs instead)
+    # repr of the fingerprint this cache was last PERSISTED under (a
+    # loaded cache can't reconstruct live tuples — spec objects don't
+    # survive JSON — so namespaces are canonical reprs on disk)
     loaded_fingerprint: str | None = None
 
     def bind_machine(self, fingerprint: Hashable) -> None:
-        """Pin the cache to one profiling context (timing function +
-        probe protocol — see ConcurrencyRuntime.profile).  Curves measure
-        a machine through a probe grid; sharing one cache across different
-        machines or probe intervals would serve wrong curves with no
-        error, so the first binder wins and any different context is
-        rejected.  A cache loaded from disk carries its persisted
-        context's repr and rejects a different live context the same
-        way."""
-        if self.machine_fingerprint is None:
-            if (self.loaded_fingerprint is not None
-                    and repr(fingerprint) != self.loaded_fingerprint):
-                raise ValueError(
-                    "PlanCache was persisted under a different machine/"
-                    f"profiling context ({self.loaded_fingerprint} != "
-                    f"{fingerprint!r}); use one cache per machine and "
-                    "probe interval")
-            self.machine_fingerprint = fingerprint
-        elif self.machine_fingerprint != fingerprint:
-            raise ValueError(
-                "PlanCache is bound to a different machine/profiling "
-                f"context ({self.machine_fingerprint!r} != {fingerprint!r});"
-                " use one cache per machine and probe interval")
+        """Select the profiling context (timing function + probe protocol
+        — see ConcurrencyRuntime.profile) whose curve namespace subsequent
+        lookups and inserts resolve under.  Curves measure a machine
+        through a probe grid, so every entry is keyed by the context it
+        was measured in: one cache can serve a whole heterogeneous
+        cluster (each machine's runtime re-binds before profiling) and a
+        lookup can never be answered by another machine's curve."""
+        self.machine_fingerprint = fingerprint
+
+    def _nskey(self, key: Hashable) -> tuple:
+        """Internal storage key: ``(namespace, key)`` where the namespace
+        is the bound context's canonical repr (``None`` when unbound).
+        Reprs, not live tuples, so that an entry persisted to JSON and
+        reloaded answers the same machine's lookups again.  Every entry
+        is wrapped — even unbound ones — so dump/load never has to guess
+        whether a tuple-shaped raw key is itself a namespace."""
+        fp = self.machine_fingerprint
+        return (repr(fp) if fp is not None else None, key)
+
+    def warm_keys(self, fingerprint: Hashable) -> frozenset:
+        """Raw keys already cached under ``fingerprint``'s namespace —
+        the curves a job routed to that machine would NOT re-pay probes
+        for.  Read-only: consulted by the cluster router for cache
+        affinity, so it must not perturb hit/miss accounting."""
+        ns = repr(fingerprint)
+        return frozenset(k for n, k in self.curves if n == ns)
 
     # ---- CurveCache protocol -----------------------------------------
     def lookup(self, key: Hashable) -> CurveModel | None:
-        curve = self.curves.get(key)
+        skey = self._nskey(key)
+        curve = self.curves.get(skey)
         if curve is None:
             self.misses += 1
             return None
         self.hits += 1
         self.probes_saved += curve.probes
         # refresh LRU position: pop + reinsert moves the key to the back
-        del self.curves[key]
-        self.curves[key] = curve
+        del self.curves[skey]
+        self.curves[skey] = curve
         return curve
 
     def insert(self, key: Hashable, curve: CurveModel) -> None:
-        self.curves.pop(key, None)        # reinsertion refreshes recency
-        self.curves[key] = curve
+        skey = self._nskey(key)
+        self.curves.pop(skey, None)       # reinsertion refreshes recency
+        self.curves[skey] = curve
         if self.max_entries is not None:
             while len(self.curves) > self.max_entries:
                 oldest = next(iter(self.curves))
@@ -206,9 +227,11 @@ class PlanCache:
                 "probes_evicted": self.probes_evicted,
             },
             # json serializes tuples as arrays recursively; _freeze on
-            # load restores them (non-tuple keys pass through untouched)
-            "entries": [{"key": k, "curve": _curve_to_json(c)}
-                        for k, c in self.curves.items()],
+            # load restores them (non-tuple keys pass through untouched).
+            # each entry records its fingerprint namespace so one file
+            # can carry a whole heterogeneous cluster's curves
+            "entries": [{"ns": ns, "key": k, "curve": _curve_to_json(c)}
+                        for (ns, k), c in self.curves.items()],
         }
         # atomic: a crash mid-dump must leave the previous good cache,
         # not a truncated file that load() degrades to empty
@@ -228,7 +251,7 @@ class PlanCache:
             if not isinstance(payload, dict):
                 raise ValueError("top-level JSON is not an object")
             schema = payload.get("schema")
-            if schema != SCHEMA_VERSION:
+            if schema != SCHEMA_VERSION and schema not in _LEGACY_SCHEMA_VERSIONS:
                 raise ValueError(
                     f"schema version {schema!r} != {SCHEMA_VERSION}")
             stats = payload["stats"]
@@ -241,7 +264,12 @@ class PlanCache:
                 loaded_fingerprint=payload["machine_fingerprint"],
             )
             for entry in payload["entries"]:
-                cache.curves[_freeze(entry["key"])] = _curve_from_json(
+                # v1 entries carried no namespace: they were measured
+                # under the file's whole-cache fingerprint, so that is
+                # the namespace they belong to
+                ns = (entry["ns"] if schema == SCHEMA_VERSION
+                      else payload["machine_fingerprint"])
+                cache.curves[(ns, _freeze(entry["key"]))] = _curve_from_json(
                     entry["curve"])
             return cache
         except Exception as e:  # noqa: BLE001 - degrade, never crash

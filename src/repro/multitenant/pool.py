@@ -56,7 +56,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Mapping, Sequence
+from typing import Iterator, Mapping, Sequence
 
 from repro.core.concurrency import OpPlan
 from repro.core.graph import Op, OpGraph, RegionEvent
@@ -690,7 +690,8 @@ class RuntimePool:
                  plan_cache: PlanCache | None = None,
                  profile_machine: SimMachine | None = None,
                  corrections: CorrectionTable | None = None,
-                 trip_counts: TripCountEstimator | None = None):
+                 trip_counts: TripCountEstimator | None = None,
+                 jid_counter: Iterator[int] | None = None):
         self.machine = machine or SimMachine()
         self.config = config or PoolConfig()
         # profiling may run on a DIFFERENT timing context than execution
@@ -731,7 +732,11 @@ class RuntimePool:
         # region shape-change counters of the CURRENT run (reset by run())
         self._region_counts = {"expand": 0, "resolve": 0}
         self.jobs: list[Job] = []
-        self._jid = itertools.count()
+        # a ClusterPool passes ONE shared counter to all member pools so
+        # jids stay globally unique and a rebalanced job's new jid can
+        # never collide with any machine's existing jobs
+        self._jid = jid_counter if jid_counter is not None \
+            else itertools.count()
         # execution-backend hooks mirrored onto the sim at begin();
         # None = pure simulation, zero overhead
         self.observer: PoolObserver | None = None
@@ -1137,6 +1142,48 @@ class RuntimePool:
         self._adapter = None
         self._active = []
         return result
+
+    @property
+    def clock(self) -> float:
+        """Current sim time of the live lifecycle (0.0 before begin())."""
+        return self._sim.clock if self._sim is not None else 0.0
+
+    # ---- cluster rebalance hook -----------------------------------------
+    def withdraw(self, jid: int) -> Job | None:
+        """Take a job BACK from this pool so a cluster layer can reroute
+        it to another machine — the admission-level-eviction move, made
+        cross-machine.  Only free moves are allowed: the job must be
+        waiting in the queue, or admitted with NO launched work (no
+        records, no running ops, no revoked partials), so withdrawing it
+        discards nothing and re-bills nothing.  A job with started work
+        returns None — moving IT would cost restart waste, and pricing
+        that is the (off-by-default) split/migration path's business, not
+        this one's.  The withdrawn job leaves this pool's ledger entirely
+        (``jobs``, queue, sim); the caller owns resubmission."""
+        job = next((j for j in self.jobs if j.jid == jid), None)
+        if job is None or job.cancelled or job.done:
+            return None
+        if self.queue.remove(jid):
+            pass
+        elif (self._sim is not None and jid in self._sim.jobs
+              and not self._sim.records[jid]
+              and not self._sim.preempted[jid]
+              and not any(k[0] == jid for k in self._sim.running)):
+            sim = self._sim
+            self._active[:] = [j for j in self._active if j.jid != jid]
+            for d in (sim.graphs, sim.jobs, sim.pending, sim.ready,
+                      sim.records, sim.completed, sim.preempted):
+                d.pop(jid, None)
+            job.admit_time = None
+            job.admitted_demand = None
+            job.evictions += 1
+            # the freed slot/demand gets its admission decision NOW,
+            # exactly like cancel()'s admitted branch
+            self._admit(sim, self._active)
+        else:
+            return None
+        self.jobs.remove(job)
+        return job
 
     # ---- cancellation ---------------------------------------------------
     def cancel(self, jid: int) -> bool:

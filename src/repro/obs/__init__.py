@@ -12,20 +12,22 @@ from repro.obs.log import configure_logging, get_logger
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                metrics_from_events, pool_metrics,
                                slowdown_metrics)
-from repro.obs.perfetto import export_pool_trace, pool_trace, write_trace
-from repro.obs.trace import (FAM_ADMISSION, FAM_PLACEMENT, FAM_PLANSTORE,
-                             FAM_PREEMPTION, FAM_REGION, FAM_SERVICE,
-                             FAM_STRATEGY, FAMILIES, NULL_SINK, NullSink,
-                             RecordingSink, TraceEvent, TraceSink)
+from repro.obs.perfetto import (cluster_trace, export_cluster_trace,
+                                export_pool_trace, pool_trace, write_trace)
+from repro.obs.trace import (FAM_ADMISSION, FAM_CLUSTER, FAM_PLACEMENT,
+                             FAM_PLANSTORE, FAM_PREEMPTION, FAM_REGION,
+                             FAM_SERVICE, FAM_STRATEGY, FAMILIES, NULL_SINK,
+                             NullSink, RecordingSink, TraceEvent, TraceSink)
 
 __all__ = [
-    "FAM_ADMISSION", "FAM_PLACEMENT", "FAM_PLANSTORE", "FAM_PREEMPTION",
-    "FAM_REGION", "FAM_SERVICE",
+    "FAM_ADMISSION", "FAM_CLUSTER", "FAM_PLACEMENT", "FAM_PLANSTORE",
+    "FAM_PREEMPTION", "FAM_REGION", "FAM_SERVICE",
     "FAM_STRATEGY", "FAMILIES", "NULL_SINK", "NullSink",
     "RecordingSink",
     "TraceEvent", "TraceSink",
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "metrics_from_events", "pool_metrics", "slowdown_metrics",
+    "cluster_trace", "export_cluster_trace",
     "export_pool_trace", "pool_trace", "write_trace",
     "configure_logging", "get_logger",
 ]

@@ -31,9 +31,9 @@ import dataclasses
 import math
 from typing import Iterable
 
-from repro.obs.trace import (FAM_ADMISSION, FAM_PLACEMENT, FAM_PLANSTORE,
-                             FAM_PREEMPTION, FAM_REGION, FAM_STRATEGY,
-                             TraceEvent)
+from repro.obs.trace import (FAM_ADMISSION, FAM_CLUSTER, FAM_PLACEMENT,
+                             FAM_PLANSTORE, FAM_PREEMPTION, FAM_REGION,
+                             FAM_STRATEGY, TraceEvent)
 
 
 def _jain(values: list[float]) -> float:
@@ -311,6 +311,17 @@ def metrics_from_events(events: Iterable[TraceEvent]) -> MetricsRegistry:
                 reg.counter("pool.migrations").inc()
         elif e.family == FAM_REGION:
             reg.counter(f"region.{e.kind}").inc()
+        elif e.family == FAM_CLUSTER:
+            reg.counter(f"cluster.{e.kind}").inc()
+            if e.kind == "route":
+                reg.counter(
+                    f"cluster.machine.{e.data['machine']}.routed").inc()
+                if "demand" in e.data:
+                    reg.histogram("cluster.routed_demand").observe(
+                        e.data["demand"])
+            elif e.kind == "rebalance":
+                reg.counter(
+                    f"cluster.machine.{e.data['to']}.routed").inc()
         elif e.family == FAM_PLANSTORE:
             if e.kind == "profile":
                 reg.counter("cache.probes_spent").inc(e.data["probes"])

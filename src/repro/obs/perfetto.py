@@ -36,6 +36,10 @@ CORES_PID = 1
 JOBS_PID = 2
 COUNTERS_PID = 3
 DECISIONS_PID = 4
+# cluster export: one process per machine, pid = MACHINE_PID_BASE + index
+# (well above the four single-machine pids so both exports can coexist in
+# one viewer session without colliding)
+MACHINE_PID_BASE = 100
 
 # virtual-lane tid bases on the cores process for launches with no booked
 # core set (flat topology / hyper-thread lane)
@@ -126,11 +130,12 @@ def _core_lane_events(jobs_records: dict, trace: list[dict]) -> None:
 
 
 def _flow_pair(fid: int, ts_from: float, ts_to: float, tid: int,
-               name: str) -> list[dict]:
-    return [{"ph": "s", "id": fid, "name": name, "cat": "preempt",
-             "ts": ts_from * US, "pid": JOBS_PID, "tid": tid},
+               name: str, pid: int = JOBS_PID,
+               cat: str = "preempt") -> list[dict]:
+    return [{"ph": "s", "id": fid, "name": name, "cat": cat,
+             "ts": ts_from * US, "pid": pid, "tid": tid},
             {"ph": "f", "bp": "e", "id": fid, "name": name,
-             "cat": "preempt", "ts": ts_to * US, "pid": JOBS_PID,
+             "cat": cat, "ts": ts_to * US, "pid": pid,
              "tid": tid}]
 
 
@@ -223,6 +228,60 @@ def pool_trace(result, events: Iterable[TraceEvent] = ()) -> dict:
     return {"traceEvents": trace, "displayTimeUnit": "ms"}
 
 
+def cluster_trace(result, events: Iterable[TraceEvent] = ()) -> dict:
+    """Trace Event Format dict for one cluster run (+ decision events).
+
+    ``result`` is duck-typed over ``repro.cluster.ClusterResult``: it
+    carries ``machines`` (one ``PoolResult``-shaped object per machine).
+    Each machine becomes its own process (pid ``MACHINE_PID_BASE + m``)
+    holding one track per tenant routed there, so the per-machine load
+    balance is visible at a glance; ``cluster``-family ``route`` events
+    draw a **route→launch flow arrow** from the routing instant to the
+    job's first launch on its assigned machine, making a queued-behind
+    routing decision visually traceable the same way preemption cost is
+    on the single-machine export."""
+    machines = getattr(result, "machines", result)
+    events = list(events)
+    trace: list[dict] = []
+    first_launch: dict[int, tuple[int, float]] = {}  # jid -> (pid, start)
+    for m, res in enumerate(machines):
+        pid = MACHINE_PID_BASE + m
+        trace.extend(_meta(pid, f"machine {m}"))
+        names = {j.jid: f"j{j.jid}:{j.name}" for j in res.jobs}
+        for jid, recs in res.records.items():
+            trace.extend(_meta(pid, f"machine {m}", jid, names[jid])[1:])
+            for r in recs:
+                trace.append(_slice(r.op.op_class, r.start, r.duration,
+                                    pid, jid, _op_args(r)))
+            if recs:
+                start = min(r.start for r in recs)
+                if jid not in first_launch or start < first_launch[jid][1]:
+                    first_launch[jid] = (pid, start)
+            for p in res.preempted.get(jid, []):
+                trace.append(_slice(f"preempted:{p.op.op_class}", p.start,
+                                    p.duration, pid, jid, _op_args(p),
+                                    cat="preempted"))
+        for ts, n in res.events:
+            trace.append(_counter(f"co_running.m{m}", ts, float(n), "ops"))
+    if any(res.events for res in machines):
+        trace.extend(_meta(COUNTERS_PID, "counters"))
+    flow_id = 10_000   # clear of pool_trace's revoke-arrow id range
+    for e in events:
+        if e.family != "cluster" or e.kind != "route":
+            continue
+        landed = first_launch.get(e.key)
+        if landed is None:
+            continue
+        pid, start = landed
+        if start >= e.ts - 1e-12:
+            flow_id += 1
+            trace.extend(_flow_pair(flow_id, e.ts, start, e.key,
+                                    "route→launch", pid=pid, cat="cluster"))
+    trace.extend(_meta(DECISIONS_PID, "decisions"))
+    _decision_events(events, trace)
+    return {"traceEvents": trace, "displayTimeUnit": "ms"}
+
+
 def write_trace(path, trace: dict) -> None:
     with open(path, "w") as f:
         json.dump(trace, f)
@@ -232,5 +291,13 @@ def export_pool_trace(result, path,
                       events: Iterable[TraceEvent] = ()) -> dict:
     """Build and write a pool run's Perfetto trace; returns the dict."""
     trace = pool_trace(result, events)
+    write_trace(path, trace)
+    return trace
+
+
+def export_cluster_trace(result, path,
+                         events: Iterable[TraceEvent] = ()) -> dict:
+    """Build and write a cluster run's Perfetto trace; returns the dict."""
+    trace = cluster_trace(result, events)
     write_trace(path, trace)
     return trace

@@ -54,9 +54,17 @@ FAM_REGION = "region"       # dynamic control flow: expand/resolve instants
 # lifecycle into the same seam the schedulers use, per the ROADMAP's
 # no-private-logging rule
 FAM_SERVICE = "service"
+# multi-machine placement (repro.cluster): route / rebalance / split
+# decisions above the per-machine pools, keyed by cluster job id with the
+# chosen machine index, the demand estimate that drove the choice, and
+# the per-machine loads at the decision instant
+FAM_CLUSTER = "cluster"
 
+# FAM_CLUSTER is appended LAST deliberately: the Perfetto exporter derives
+# decision-lane tids from this tuple's order, so end-appending keeps every
+# pre-cluster trace's lane numbering stable
 FAMILIES = (FAM_ADMISSION, FAM_STRATEGY, FAM_PLACEMENT, FAM_PREEMPTION,
-            FAM_PLANSTORE, FAM_REGION, FAM_SERVICE)
+            FAM_PLANSTORE, FAM_REGION, FAM_SERVICE, FAM_CLUSTER)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,4 +1,5 @@
-"""Pool-as-a-service: a long-lived daemon owning one ``RuntimePool``.
+"""Pool-as-a-service: a long-lived daemon owning one ``RuntimePool``
+(or, given a ``ClusterSpec``, one ``ClusterPool`` spanning N machines).
 
 ``PoolDaemon`` turns the library pool into a service: it owns one
 ``RuntimePool`` plus one persistent ``RealGraphExecutor`` worker set,
@@ -33,6 +34,16 @@ and observation counts carry over — learning does not reset), resubmits
 every unfinished job's spec in original submit order, bills interrupted
 work as restart waste exactly once, and resumes the sim at the
 checkpointed clock.
+
+**Cluster mode.**  ``PoolDaemon(..., cluster=ClusterSpec(...))`` drives
+a ``repro.cluster.ClusterPool`` instead: jobs route across N machines,
+the job store records each entry's machine assignment (recovery
+resubmits to the SAME machine rather than re-routing — the placement is
+state, not policy), checkpoints carry every member machine's local
+clock, restart waste is billed at the assigned machine's own
+``restart_waste`` rate, and each simulated machine's payloads are
+pinned to a distinct host JAX device
+(``--xla_force_host_platform_device_count=N``).
 """
 
 from __future__ import annotations
@@ -45,8 +56,11 @@ import warnings
 from concurrent.futures import Future
 from typing import Mapping
 
+from repro.cluster.pool import ClusterPool, ClusterResult
+from repro.cluster.router import RouterConfig
 from repro.core.planstore import CorrectionTable, TripCountEstimator
 from repro.core.runtime import RealGraphExecutor, report_payload_observation
+from repro.hw.spec import ClusterSpec
 from repro.multitenant.plancache import PlanCache, atomic_write_text
 from repro.multitenant.pool import (PoolConfig, PoolObserver, PoolResult,
                                     RuntimePool)
@@ -61,13 +75,22 @@ class _PayloadObserver(PoolObserver):
     payload futures (read-only on the sim: the timeline it observes is
     bit-for-bit the unobserved one)."""
 
-    def __init__(self, pool: RuntimePool, executor: RealGraphExecutor,
+    def __init__(self, pool, executor: RealGraphExecutor,
                  *, payload_feedback: bool = False):
-        self.pool = pool
+        self.pool = pool                 # RuntimePool or ClusterPool
         self.executor = executor
         self.payload_feedback = payload_feedback
         #: jid -> {uid -> payload future} for in-flight/finished launches
         self.futures: dict[int, dict[int, Future]] = {}
+
+    def _sim_of(self, jid: int):
+        """The sim that owns ``jid`` (a cluster pool has one per
+        machine; the jid's assignment names it)."""
+        pools = getattr(self.pool, "pools", None)
+        if pools is None:
+            return self.pool._sim
+        m = self.pool.assignment.get(jid)
+        return pools[m]._sim if m is not None else None
 
     def on_launch(self, key, sched) -> None:
         jid, uid = key
@@ -78,7 +101,11 @@ class _PayloadObserver(PoolObserver):
         # deps resolve to their payload future when one exists, else to
         # the materialized None a payload-less dep produces
         deps = {d: futs.get(d) for d in op.deps}
-        futs[uid] = self.executor.submit_op(op, deps)
+        # cluster mode: the payload lands on the host JAX device mapped
+        # to the machine this job was routed to (None = unpinned)
+        machine = getattr(self.pool, "assignment", {}).get(jid)
+        futs[uid] = self.executor.submit_op(
+            op, deps, device=self.executor.device_for(machine))
 
     def on_revoke(self, key, sched) -> None:
         jid, uid = key
@@ -95,7 +122,8 @@ class _PayloadObserver(PoolObserver):
             return
         jid, uid = key
         fut = self.futures.get(jid, {}).get(uid)
-        job = self.pool._sim.jobs.get(jid) if self.pool._sim else None
+        sim = self._sim_of(jid)
+        job = sim.jobs.get(jid) if sim is not None else None
         if fut is None or fut.cancelled() or job is None \
                 or job.store is None:
             return
@@ -113,9 +141,15 @@ class PoolDaemon:
 
     def __init__(self, state_dir: str | pathlib.Path, *,
                  config: PoolConfig | None = None, machine=None,
+                 cluster: ClusterSpec | None = None,
+                 router: RouterConfig | None = None,
                  checkpoint_every: int = 1, max_workers: int = 2,
                  execute_payloads: bool = True,
                  payload_feedback: bool = False):
+        if cluster is not None and machine is not None:
+            raise ValueError("pass cluster (the daemon builds the "
+                             "member machines) OR machine, not both")
+        self.cluster = cluster
         self.state_dir = pathlib.Path(state_dir)
         self.inbox = self.state_dir / "inbox"
         self.outbox = self.state_dir / "outbox"
@@ -141,15 +175,23 @@ class PoolDaemon:
             if state.trip_counts is not None:
                 trip_counts = TripCountEstimator.from_dict(
                     state.trip_counts)
-        self.pool = RuntimePool(machine=machine, config=config,
-                                plan_cache=cache, corrections=corrections,
-                                trip_counts=trip_counts)
+        if cluster is not None:
+            self.pool = ClusterPool(cluster, config=config,
+                                    plan_cache=cache, router=router,
+                                    corrections=corrections,
+                                    trip_counts=trip_counts)
+        else:
+            self.pool = RuntimePool(machine=machine, config=config,
+                                    plan_cache=cache,
+                                    corrections=corrections,
+                                    trip_counts=trip_counts)
 
         self.executor: RealGraphExecutor | None = None
         self.observer: _PayloadObserver | None = None
         if execute_payloads:
-            self.executor = RealGraphExecutor(max_workers=max_workers,
-                                              persistent=True)
+            self.executor = RealGraphExecutor(
+                max_workers=max_workers, persistent=True,
+                n_devices=len(cluster) if cluster is not None else None)
             self.observer = _PayloadObserver(
                 self.pool, self.executor,
                 payload_feedback=payload_feedback)
@@ -174,12 +216,45 @@ class PoolDaemon:
             self._recover(state)
         else:
             self._emit("start", data={})
-        self.pool.begin(clock=clock)
+        if self._is_cluster:
+            # each member machine resumes at ITS OWN checkpointed clock
+            # (a pre-cluster or 1-entry store falls back to the max)
+            clocks = state.clocks if recovered else None
+            if clocks is not None and len(clocks) == len(self.pool.pools):
+                self.pool.begin(clocks=clocks)
+            else:
+                self.pool.begin(clock=clock)
+        else:
+            self.pool.begin(clock=clock)
         self.checkpoint()
 
+    @property
+    def _is_cluster(self) -> bool:
+        return self.cluster is not None
+
+    @property
+    def _member_pools(self) -> list[RuntimePool]:
+        return self.pool.pools if self._is_cluster else [self.pool]
+
+    def _clock(self) -> float:
+        if self._is_cluster:
+            return max((p.clock for p in self.pool.pools), default=0.0)
+        return (self.pool._sim.clock
+                if self.pool._sim is not None else 0.0)
+
     # ---- recovery -------------------------------------------------------
+    def _waste_factor(self, entry: JobEntry) -> float:
+        """Restart waste is billed at the rate of the machine the work
+        was LOST on (heterogeneous clusters: a fat machine's lost
+        core-seconds cost what that machine charges)."""
+        if self._is_cluster:
+            m = entry.machine if (entry.machine is not None
+                                  and entry.machine
+                                  < len(self.pool.pools)) else 0
+            return self.pool.pools[m].machine.spec.restart_waste
+        return self.pool.machine.spec.restart_waste
+
     def _recover(self, state: StoreState) -> None:
-        waste_factor = self.pool.machine.spec.restart_waste
         for entry in sorted(state.entries, key=lambda e: e.order):
             self.entries.append(entry)
             if entry.state in ("done", "cancelled"):
@@ -191,11 +266,19 @@ class PoolDaemon:
                     f"attached graph; not recoverable", stacklevel=2)
                 entry.state = "cancelled"
                 continue
+            waste_factor = self._waste_factor(entry)
             # resubmission in original order = original queue order (the
             # queue's FIFO tie-break follows submission sequence), so an
             # admitted-but-unlaunched job is readmitted exactly as the
-            # eviction path would readmit it: deferred, never demoted
-            job = submit_spec(self.pool, entry.spec)
+            # eviction path would readmit it: deferred, never demoted.
+            # Cluster mode: the checkpointed machine assignment is
+            # RESTORED, not re-routed — placement is state
+            forced = (entry.machine if self._is_cluster
+                      and entry.machine is not None
+                      and entry.machine < len(self.pool.pools) else None)
+            job = submit_spec(self.pool, entry.spec, machine=forced)
+            if self._is_cluster:
+                entry.machine = self.pool.assignment.get(job.jid)
             self._jid_by_order[entry.order] = job.jid
             # the crash lost this entry's in-flight work; bill it as
             # restart waste EXACTLY ONCE (progress resets to zero below,
@@ -226,6 +309,11 @@ class PoolDaemon:
         jid = self._jid_by_order.get(entry.order)
         if jid is None:
             return None
+        if self._is_cluster:
+            # a rebalance re-minted the jid; follow the alias chain and
+            # remember the current one
+            jid = self.pool.current_jid(jid)
+            self._jid_by_order[entry.order] = jid
         return next((j for j in self.pool.jobs if j.jid == jid), None)
 
     def _sync_entry(self, entry: JobEntry) -> None:
@@ -243,7 +331,12 @@ class PoolDaemon:
                             "service_core_s": job.service,
                             "preemptions": job.preemptions}
         else:
-            sim = self.pool._sim
+            if self._is_cluster:
+                m = self.pool.assignment.get(job.jid)
+                entry.machine = m if m is not None else entry.machine
+                sim = (self.pool.pools[m]._sim if m is not None else None)
+            else:
+                sim = self.pool._sim
             if sim is not None and job.jid in sim.jobs:
                 started = (bool(sim.records.get(job.jid))
                            or any(k[0] == job.jid for k in sim.running)
@@ -257,10 +350,9 @@ class PoolDaemon:
     def _emit(self, kind: str, key=None, data: Mapping | None = None):
         if not self.sink.enabled:
             return
-        now = (self.pool._sim.clock
-               if getattr(self.pool, "_sim", None) is not None else 0.0)
-        self.sink.emit(TraceEvent(ts=now, family=FAM_SERVICE, kind=kind,
-                                  key=key, data=dict(data or {})))
+        self.sink.emit(TraceEvent(ts=self._clock(), family=FAM_SERVICE,
+                                  kind=kind, key=key,
+                                  data=dict(data or {})))
 
     # ---- checkpointing --------------------------------------------------
     def checkpoint(self) -> None:
@@ -270,14 +362,16 @@ class PoolDaemon:
             self._sync_entry(entry)
         pool = self.pool
         state = StoreState(
-            clock=pool._sim.clock if pool._sim is not None else 0.0,
+            clock=self._clock(),
             restarts=self.restarts,
             config=self.config.to_dict(),
             entries=self.entries,
             corrections=(pool.corrections.to_dict()
                          if pool.corrections is not None else None),
             trip_counts=(pool.trip_counts.to_dict()
-                         if pool.trip_counts is not None else None))
+                         if pool.trip_counts is not None else None),
+            clocks=([p.clock for p in pool.pools]
+                    if self._is_cluster else None))
         save_store(self.store_path, state)
         pool.plan_cache.dump(self.cache_path)
         self._emit("checkpoint", data={"entries": len(self.entries),
@@ -291,12 +385,14 @@ class PoolDaemon:
             spec = JobSpec.from_dict(spec)
         order = (max((e.order for e in self.entries), default=-1)) + 1
         job = submit_spec(self.pool, spec, graph=graph)
-        entry = JobEntry(spec=spec, order=order)
+        entry = JobEntry(spec=spec, order=order,
+                         machine=(self.pool.assignment.get(job.jid)
+                                  if self._is_cluster else None))
         self.entries.append(entry)
         self._jid_by_order[order] = job.jid
         self._emit("submit", key=self.public_id(order),
                    data={"jid": job.jid, "workload": spec.workload,
-                         "name": job.name})
+                         "name": job.name, "machine": entry.machine})
         self.checkpoint()
         return self.public_id(order)
 
@@ -304,8 +400,8 @@ class PoolDaemon:
         entry = self._entry_by_id(job_id)
         if entry is None:
             return False
-        jid = self._jid_by_order.get(entry.order)
-        ok = self.pool.cancel(jid) if jid is not None else False
+        job = self._job_of(entry)      # alias-resolves rebalanced jids
+        ok = self.pool.cancel(job.jid) if job is not None else False
         if ok:
             entry.state = "cancelled"
             self.checkpoint()
@@ -315,22 +411,27 @@ class PoolDaemon:
     def status(self) -> dict:
         for entry in self.entries:
             self._sync_entry(entry)
-        sim = self.pool._sim
-        return {
-            "clock": sim.clock if sim is not None else 0.0,
+        out = {
+            "clock": self._clock(),
             "restarts": self.restarts,
             "steps": self.total_steps,
-            "queued": len(self.pool.queue),
-            "active": len(self.pool._active),
+            "queued": sum(len(p.queue) for p in self._member_pools),
+            "active": sum(len(p._active) for p in self._member_pools),
             "jobs": [{"id": self.public_id(e.order),
                       "name": e.spec.name or e.spec.workload,
                       "workload": e.spec.workload,
                       "state": e.state,
+                      "machine": e.machine,
                       "carried_waste": e.carried_waste,
                       "restarts": e.restarts,
                       "result": e.result}
                      for e in sorted(self.entries,
                                      key=lambda e: e.order)]}
+        if self._is_cluster:
+            out["machines"] = len(self.pool.pools)
+            out["clocks"] = [p.clock for p in self.pool.pools]
+            out["rebalances"] = self.pool.n_rebalances
+        return out
 
     # ---- the pump -------------------------------------------------------
     def _after_step(self) -> None:
@@ -348,9 +449,10 @@ class PoolDaemon:
             self._after_step()
         return steps
 
-    def drain(self) -> PoolResult:
+    def drain(self) -> PoolResult | ClusterResult:
         """Run every accepted job to completion and return the pool
-        result (same metrics surface as ``RuntimePool.run``)."""
+        result (same metrics surface as ``RuntimePool.run``; a
+        ``ClusterResult`` in cluster mode)."""
         self.pump()
         self.checkpoint()
         result = self.pool.result()

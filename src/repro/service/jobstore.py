@@ -67,12 +67,17 @@ class JobEntry:
     progress_core_s: float = 0.0
     restarts: int = 0
     result: dict | None = None        # summary, filled when state == done
+    # cluster daemons record WHICH machine the job was routed to, so
+    # recovery restores the checkpointed placement instead of re-routing
+    # (None: single-machine daemon, or a pre-cluster store)
+    machine: int | None = None
 
     def to_dict(self) -> dict:
         return {"spec": self.spec.to_dict(), "order": self.order,
                 "state": self.state, "carried_waste": self.carried_waste,
                 "progress_core_s": self.progress_core_s,
-                "restarts": self.restarts, "result": self.result}
+                "restarts": self.restarts, "result": self.result,
+                "machine": self.machine}
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "JobEntry":
@@ -95,13 +100,17 @@ class StoreState:
     entries: list[JobEntry] = dataclasses.field(default_factory=list)
     corrections: dict | None = None   # CorrectionTable.to_dict()
     trip_counts: dict | None = None   # TripCountEstimator.to_dict()
+    # cluster daemons: each member machine's local clock at checkpoint
+    # (``clock`` keeps the max, for status/back-compat)
+    clocks: list[float] | None = None
 
     def to_dict(self) -> dict:
         return {"schema": STORE_SCHEMA_VERSION, "clock": self.clock,
                 "restarts": self.restarts, "config": self.config,
                 "entries": [e.to_dict() for e in self.entries],
                 "corrections": self.corrections,
-                "trip_counts": self.trip_counts}
+                "trip_counts": self.trip_counts,
+                "clocks": self.clocks}
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "StoreState":

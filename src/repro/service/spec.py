@@ -118,14 +118,19 @@ class JobSpec:
             {f.name for f in dataclasses.fields(cls)}))
 
 
-def submit_spec(pool, spec: JobSpec, *, graph: OpGraph | None = None):
-    """Submit one spec to a ``repro.multitenant.RuntimePool`` — the ONE
-    call every entry point funnels through.  Returns the created Job."""
+def submit_spec(pool, spec: JobSpec, *, graph: OpGraph | None = None,
+                machine: int | None = None):
+    """Submit one spec to a ``repro.multitenant.RuntimePool`` or a
+    ``repro.cluster.ClusterPool`` — the ONE call every entry point
+    funnels through.  Returns the created Job.  ``machine`` forces the
+    cluster placement (the daemon's recovery path restoring a
+    checkpointed assignment); only valid on a ClusterPool."""
     g = graph if graph is not None else spec.build_graph()
+    kwargs = {"machine": machine} if machine is not None else {}
     job = pool.submit(g, priority=spec.priority,
                       name=spec.name or g.name,
                       submit_time=spec.submit_time,
-                      deadline=spec.resolved_deadline())
+                      deadline=spec.resolved_deadline(), **kwargs)
     if spec.demand_hint is not None:
         # admission prices the job at the hint instead of the profiled
         # estimate (the closed loop re-derives demand once ops finish)

@@ -41,7 +41,8 @@ from repro.core.graph import (DynamicGraphBuilder, DynamicOpGraph,
 from repro.core.planstore import TripCountEstimator
 from repro.multitenant import (PoolConfig, RuntimePool, compare_timelines,
                                corun_timeline, timeline_rows)
-from repro.obs import (FAM_REGION, FAM_SERVICE, FAMILIES, RecordingSink,
+from repro.obs import (FAM_CLUSTER, FAM_REGION, FAM_SERVICE, FAMILIES,
+                       RecordingSink,
                        metrics_from_events)
 
 
@@ -401,9 +402,12 @@ class TestDynamicPool:
                         submit_time=submit,
                         deadline=(submit + 0.002 if i % 2 else None))
         pool.run()
-        # every family except the daemon-only service lifecycle (that
-        # one fires from PoolDaemon — covered in tests/test_service.py)
-        assert sink.families() == set(FAMILIES) - {FAM_SERVICE}
+        # every family except the daemon-only service lifecycle (fires
+        # from PoolDaemon — covered in tests/test_service.py) and the
+        # cluster family (needs a second machine — covered in
+        # tests/test_cluster.py)
+        assert sink.families() == set(FAMILIES) - {FAM_SERVICE,
+                                                   FAM_CLUSTER}
 
 
 # ---------------------------------------------------------------------------

@@ -590,16 +590,25 @@ class TestPoolVsSerial:
         pb = b.plan.per_instance[("attention", (4, 8, 16, 16))]
         assert pa.predicted_time != pb.predicted_time
 
-    def test_plancache_rejects_different_machine(self, machine):
+    def test_plancache_isolates_different_machine(self, machine):
+        # lookups are fingerprint-keyed: a second machine sharing the
+        # cache never reuses (or pollutes) the first machine's curves —
+        # it pays its own probes into its own namespace
         cache = PlanCache()
         pool_a = RuntimePool(machine=machine, plan_cache=cache)
         pool_a.submit(build_paper_graph("dcgan"), name="a")
+        spent_a = cache.probes_spent
+        assert spent_a > 0
         other = SimMachine(seed=99)
         pool_b = RuntimePool(machine=other, plan_cache=cache)
-        with pytest.raises(ValueError, match="different machine"):
-            pool_b.submit(build_paper_graph("dcgan"), name="b")
+        saved_before = cache.probes_saved
+        pool_b.submit(build_paper_graph("dcgan"), name="b")
+        assert cache.probes_saved == saved_before, \
+            "machine B must not hit machine A's curves"
+        assert cache.probes_spent > spent_a, \
+            "machine B pays its own probes"
 
-    def test_plancache_rejects_different_probe_interval(self, machine):
+    def test_plancache_isolates_different_probe_interval(self, machine):
         from repro.core import RuntimeConfig
         from repro.core.runtime import ConcurrencyRuntime
         cache = PlanCache()
@@ -607,11 +616,15 @@ class TestPoolVsSerial:
                            config=RuntimeConfig(interval=4),
                            plan_cache=cache).profile(
                                build_paper_graph("dcgan"))
+        spent = cache.probes_spent
         rt = ConcurrencyRuntime(machine=machine,
                                 config=RuntimeConfig(interval=8),
                                 plan_cache=cache)
-        with pytest.raises(ValueError, match="different machine"):
-            rt.profile(build_paper_graph("dcgan"))
+        saved_before = cache.probes_saved
+        rt.profile(build_paper_graph("dcgan"))
+        assert cache.probes_saved == saved_before
+        assert cache.probes_spent > spent, \
+            "a different probe interval is a different namespace"
 
     def test_plancache_identical_jobs_profile_once(self, machine):
         cache = PlanCache()

@@ -24,7 +24,8 @@ from repro.core import SimMachine, build_paper_graph
 from repro.multitenant import (PoolConfig, PreemptionPolicy, RuntimePool,
                                check_parity, compare_timelines,
                                timeline_rows)
-from repro.obs import (FAM_ADMISSION, FAM_PLACEMENT, FAM_PLANSTORE,
+from repro.obs import (FAM_ADMISSION, FAM_CLUSTER, FAM_PLACEMENT,
+                       FAM_PLANSTORE,
                        FAM_PREEMPTION, FAM_REGION, FAM_SERVICE, FAM_STRATEGY,
                        FAMILIES, NULL_SINK, MetricsRegistry, NullSink,
                        RecordingSink, TraceEvent, configure_logging,
@@ -131,11 +132,13 @@ class TestTraceInertness:
 class TestEventStream:
     def test_all_static_families_fire_on_the_armed_mix(self, traced_mix):
         # FAM_REGION only fires on dynamic graphs (tests/test_dynamic.py
-        # covers that) and FAM_SERVICE only from the pool daemon
-        # (tests/test_service.py); the armed STATIC mix must fire the
-        # remaining five and nothing else
+        # covers that), FAM_SERVICE only from the pool daemon
+        # (tests/test_service.py), and FAM_CLUSTER only from a ClusterPool
+        # (tests/test_cluster.py); the armed single-machine STATIC mix
+        # must fire the remaining five and nothing else
         _, _, sink = traced_mix
-        assert sink.families() == set(FAMILIES) - {FAM_REGION, FAM_SERVICE}
+        assert sink.families() == set(FAMILIES) - {FAM_REGION, FAM_SERVICE,
+                                                   FAM_CLUSTER}
 
     def test_events_carry_causes_and_inputs(self, traced_mix):
         _, _, sink = traced_mix
@@ -245,7 +248,8 @@ class TestPerfettoExport:
         assert pids == {1, 2, 3, 4}
         decision_cats = {e["cat"] for e in events
                          if e["ph"] == "i" and e["pid"] == 4}
-        assert decision_cats == set(FAMILIES) - {FAM_REGION, FAM_SERVICE}
+        assert decision_cats == set(FAMILIES) - {FAM_REGION, FAM_SERVICE,
+                                                 FAM_CLUSTER}
         counter_names = {e["name"] for e in events if e["ph"] == "C"}
         assert {"co_running", "queue_depth",
                 "bw_share_demand"} <= counter_names

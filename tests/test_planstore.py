@@ -372,9 +372,12 @@ class TestPlanCachePersistence:
         path = tmp_path / "cache.json"
         cache.dump(path)
         loaded = PlanCache.load(path)
-        assert list(loaded.curves) == [keys[1], keys[2], keys[0]]
+        # internal keys are (namespace, key) pairs; unbound inserts live
+        # under the None namespace
+        assert list(loaded.curves) == [(None, keys[1]), (None, keys[2]),
+                                       (None, keys[0])]
         for k in keys:
-            a, b = cache.curves[k], loaded.curves[k]
+            a, b = cache.curves[(None, k)], loaded.curves[(None, k)]
             assert a.samples == b.samples          # bit-exact floats
             assert a.case_lists == b.case_lists
             assert a.probes == b.probes
@@ -391,7 +394,7 @@ class TestPlanCachePersistence:
         cache.dump(path)
         loaded = PlanCache.load(path)
         loaded.insert("c", self._curve())
-        assert set(loaded.curves) == {"a", "c"}, \
+        assert set(loaded.curves) == {(None, "a"), (None, "c")}, \
             "persisted recency must decide who gets evicted"
 
     # degraded loads log through the shared "repro" logger (WARNING on
@@ -432,22 +435,60 @@ class TestPlanCachePersistence:
         assert loaded.curves == {}
         assert any("schema version" in r.getMessage() for r in caplog.records)
 
-    def test_fingerprint_binding_survives_round_trip(self, tmp_path):
-        machine = SimMachine(seed=0)
+    def test_fingerprint_keyed_lookups_isolate_machines(self, tmp_path):
+        """Regression (issue 10): binding used to be whole-cache and only
+        compared at dump/load — lookups were never actually namespaced,
+        so a heterogeneous cluster could not share one cache file.  Now
+        every entry is keyed by the fingerprint bound at insert time."""
+        fp_a = (SimMachine(seed=0).fingerprint, 4)
+        fp_b = (SimMachine(seed=1).fingerprint, 4)
         cache = PlanCache()
-        cache.bind_machine((machine.fingerprint, 4))
+        key = ("Conv2D", (32, 8, 8, 64), 1e9, 2e6, 2e6, 0.96, True)
+        cache.bind_machine(fp_a)
+        curve_a = self._curve(scale=1.0)
+        cache.insert(key, curve_a)
+        # machine B must NOT see machine A's curve for the same op key
+        cache.bind_machine(fp_b)
+        assert cache.lookup(key) is None
+        curve_b = self._curve(scale=2.0)
+        cache.insert(key, curve_b)
+        # each machine reuses exactly its own curve
+        assert cache.lookup(key).samples == curve_b.samples
+        cache.bind_machine(fp_a)
+        assert cache.lookup(key).samples == curve_a.samples
+        assert cache.warm_keys(fp_a) == {key} == cache.warm_keys(fp_b)
+
+        # one shared FILE round-trips both namespaces disjointly
         path = tmp_path / "cache.json"
         cache.dump(path)
         loaded = PlanCache.load(path)
-        # same context rebinds fine...
         loaded.bind_machine((SimMachine(seed=0).fingerprint, 4))
-        # ...a different machine or probe interval is refused
-        loaded2 = PlanCache.load(path)
-        with pytest.raises(ValueError, match="persisted under a different"):
-            loaded2.bind_machine((SimMachine(seed=1).fingerprint, 4))
-        loaded3 = PlanCache.load(path)
-        with pytest.raises(ValueError, match="persisted under a different"):
-            loaded3.bind_machine((SimMachine(seed=0).fingerprint, 8))
+        assert loaded.lookup(key).samples == curve_a.samples
+        loaded.bind_machine((SimMachine(seed=1).fingerprint, 4))
+        assert loaded.lookup(key).samples == curve_b.samples
+        # ...and a context never written to the file stays cold
+        loaded.bind_machine((SimMachine(seed=0).fingerprint, 8))
+        assert loaded.lookup(key) is None
+
+    def test_legacy_schema1_file_loads_under_its_fingerprint(self, tmp_path):
+        fp = (SimMachine(seed=0).fingerprint, 4)
+        cache = PlanCache()
+        cache.bind_machine(fp)
+        key = ("MatMul", (16, 16), 4e8, 6e4, 6e4, 0.96, True)
+        cache.insert(key, self._curve())
+        path = tmp_path / "cache.json"
+        cache.dump(path)
+        # rewrite as a v1 file: no per-entry namespace, whole-cache
+        # fingerprint at top level
+        payload = json.loads(path.read_text())
+        payload["schema"] = 1
+        for entry in payload["entries"]:
+            del entry["ns"]
+        path.write_text(json.dumps(payload))
+        loaded = PlanCache.load(path)
+        loaded.bind_machine((SimMachine(seed=0).fingerprint, 4))
+        assert loaded.lookup(key) is not None, \
+            "v1 entries belong to the file's whole-cache fingerprint"
 
     def test_pool_reuses_persisted_curves_without_probes(self, tmp_path,
                                                          machine):
